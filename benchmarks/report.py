@@ -1,0 +1,77 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def dryrun_table(rows, mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | mode | lower+compile (s) | args GiB/dev | "
+          "temp GiB/dev | fits 16 GiB |")
+    print("|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["mesh"] != mesh:
+            continue
+        tot = (d["memory"]["argument_bytes"]
+               + d["memory"]["temp_bytes"]) / 2**30
+        print(f"| {d['arch']} | {d['shape']} | {d['mode']} | "
+              f"{d['lower_s'] + d['compile_s']:.1f} | "
+              f"{fmt_bytes(d['memory']['argument_bytes'])} | "
+              f"{fmt_bytes(d['memory']['temp_bytes'])} | "
+              f"{'yes' if tot <= 16 else f'no ({tot:.0f})'} |")
+
+
+def roofline_table(rows):
+    print("\n| arch | shape | compute ms | memory ms | collective ms | "
+          "bottleneck | MODEL/HLO flops | dominant collective |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["mesh"] != "16x16":
+            continue
+        rl = d["roofline"]
+        coll = {k: v for k, v in rl["collective_by_kind"].items() if v}
+        top = max(coll, key=coll.get) if coll else "-"
+        uf = d.get("useful_flops_ratio")
+        print(f"| {d['arch']} | {d['shape']} | {rl['compute_s']*1e3:.2f} | "
+              f"{rl['memory_s']*1e3:.2f} | {rl['collective_s']*1e3:.3f} | "
+              f"{rl['bottleneck']} | {uf:.2f} | "
+              f"{top} ({coll.get(top, 0)/2**20:.0f} MiB) |"
+              if uf else
+              f"| {d['arch']} | {d['shape']} | {rl['compute_s']*1e3:.2f} | "
+              f"{rl['memory_s']*1e3:.2f} | {rl['collective_s']*1e3:.3f} | "
+              f"{rl['bottleneck']} | - | {top} |")
+
+
+def main():
+    rows = load("experiments/dryrun/*.json")
+    if not rows:
+        print("no dry-run artifacts found", file=sys.stderr)
+        return
+    print("## §Dry-run — lower + compile for every (arch × shape × mesh)\n")
+    print(f"{len(rows)} combinations compiled successfully.")
+    dryrun_table(rows, "16x16")
+    dryrun_table(rows, "2x16x16")
+    print("\n## §Roofline — single-pod (16×16, 256 chips), per-chip terms\n")
+    roofline_table(rows)
+
+
+if __name__ == "__main__":
+    main()

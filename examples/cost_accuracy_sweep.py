@@ -1,0 +1,80 @@
+"""Reproduce the paper's cost-accuracy trade-off plot (Figure 2) on the
+synthetic suite: local-only / Minion / MinionS / RAG / remote-only across
+local model scales, printed as an ASCII scatter + CSV.
+
+    PYTHONPATH=src python examples/cost_accuracy_sweep.py [--tasks 24]
+"""
+import argparse
+
+from repro.core import (CostModel, MinionConfig, MinionSConfig, Usage,
+                        run_local_only, run_minion, run_minions, run_rag,
+                        run_remote_only)
+from repro.core.simulated import ScriptedRemote, SimulatedLocal
+from repro.core.tasks import make_dataset, score_answer
+
+CM = CostModel()
+
+
+def evaluate(runner, tasks):
+    correct, usage = 0, Usage()
+    for t in tasks:
+        r = runner(t)
+        correct += score_answer(r.answer, t.answer)
+        usage += r.remote_usage
+    return correct / len(tasks), CM.usd(usage) / len(tasks)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=24)
+    args = ap.parse_args()
+    tasks = make_dataset(args.tasks, seed=7, n_pages=120, compute_frac=0.4)
+    remote = ScriptedRemote(seed=0)
+
+    points = []
+    acc, cost = evaluate(
+        lambda t: run_remote_only(remote, t.context, t.query), tasks)
+    points.append(("remote-only", acc, cost))
+    acc, cost = evaluate(
+        lambda t: run_rag(remote, t.context, t.query, top_k=10), tasks)
+    points.append(("rag-bm25-10", acc, cost))
+    for prof in ("llama-8b", "llama-3b", "llama-1b"):
+        local = SimulatedLocal(prof, seed=0)
+        acc, cost = evaluate(
+            lambda t: run_local_only(local, t.context, t.query), tasks)
+        points.append((f"local-{prof}", acc, cost))
+        acc, cost = evaluate(
+            lambda t: run_minion(local, remote, t.context, t.query,
+                                 MinionConfig(max_rounds=3)), tasks)
+        points.append((f"minion-{prof}", acc, cost))
+        acc, cost = evaluate(
+            lambda t: run_minions(local, remote, t.context, t.query,
+                                  MinionSConfig()), tasks)
+        points.append((f"minions-{prof}", acc, cost))
+
+    print("\nname,accuracy,usd_per_query")
+    for name, acc, cost in points:
+        print(f"{name},{acc:.3f},{cost:.5f}")
+
+    # ASCII cost-accuracy plot (log-ish x)
+    max_cost = max(c for _, _, c in points) or 1.0
+    print("\naccuracy ^")
+    for level in range(10, -1, -2):
+        lo = level / 10
+        row = ""
+        for col in range(60):
+            c_lo = max_cost * col / 60
+            c_hi = max_cost * (col + 1) / 60
+            mark = " "
+            for name, acc, cost in points:
+                if lo <= acc < lo + 0.2 and c_lo <= cost < c_hi:
+                    mark = name[0].upper() if name[0] != "l" else (
+                        "L" if "local" in name else "l")
+            row += mark
+        print(f"{lo:4.1f} |{row}")
+    print("      " + "-" * 60 + "> $/query")
+    print("  R=remote r=rag L=local-only m=minion(s)")
+
+
+if __name__ == "__main__":
+    main()

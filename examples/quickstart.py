@@ -1,0 +1,52 @@
+"""Quickstart: run MinionS on one synthetic financial-document task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the whole loop — the remote writes decomposition *code*, the sandbox
+executes it over the local document, jobs run in parallel on the local
+model, abstentions are filtered, and the remote synthesizes a final answer
+— plus the cost accounting that is the paper's headline result.
+"""
+from repro.core import (CostModel, MinionSConfig, run_minions,
+                        run_remote_only)
+from repro.core.simulated import ScriptedRemote, SimulatedLocal
+from repro.core.tasks import make_task, score_answer
+
+
+def main():
+    task = make_task(seed=7, n_pages=60, kind="compute")
+    print(f"QUERY   : {task.query}")
+    print(f"ANSWER  : {task.answer}")
+    print(f"CONTEXT : {len(task.context):,} chars "
+          f"(~{len(task.context) // 4:,} tokens)\n")
+
+    local = SimulatedLocal("llama-8b", seed=0)     # calibrated 8B stand-in
+    remote = ScriptedRemote(seed=0)                # frontier stand-in
+    cm = CostModel()                               # GPT-4o Jan-2025 prices
+
+    result = run_minions(local, remote, task.context, task.query,
+                         MinionSConfig(max_rounds=3))
+    baseline = run_remote_only(remote, task.context, task.query)
+
+    print("--- MinionS transcript (truncated) ---")
+    for e in result.transcript:
+        print(f"[{e['role']} r{e.get('round')}] "
+              f"{e['text'][:160].replace(chr(10), ' | ')}")
+    print()
+    for rec in result.rounds:
+        print(f"round {rec.round_index}: {rec.num_jobs} jobs -> "
+              f"{rec.num_kept} kept -> {rec.decision}")
+
+    ok = score_answer(result.answer, task.answer)
+    base_ok = score_answer(baseline.answer, task.answer)
+    c_minions = cm.usd(result.remote_usage)
+    c_remote = cm.usd(baseline.remote_usage)
+    print(f"\nMinionS answer : {result.answer!r}  "
+          f"({'correct' if ok else 'wrong'})  cost=${c_minions:.4f}")
+    print(f"Remote-only    : {baseline.answer!r}  "
+          f"({'correct' if base_ok else 'wrong'})  cost=${c_remote:.4f}")
+    print(f"Cloud-cost reduction: {c_remote / max(c_minions, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serving-style driver: a persistent local engine answering a stream of
+batched MinionS requests (the deployment shape of the paper's system).
+
+    PYTHONPATH=src python examples/serve_minions.py [--requests 3]
+
+Each incoming (document, query) request runs the full MinionS loop against
+the shared local engine; the report shows per-request cost, tokens and
+engine utilisation — the operational counters a real deployment monitors.
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel, MinionSConfig, run_minions
+from repro.core.clients import EngineClient
+from repro.core.simulated import ScriptedRemote
+from repro.core.tasks import make_task, score_answer
+from repro.models import transformer as T
+from repro.serving import InferenceEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = InferenceEngine(cfg, params, max_seq_len=4096,
+                             truncate_long=True)
+    local = EngineClient(engine, "local-engine", max_batch=8)
+    remote = ScriptedRemote(seed=0)
+    cm = CostModel()
+
+    total_cost = 0.0
+    for i in range(args.requests):
+        task = make_task(500 + i, n_pages=3, kind="extract")
+        t0 = time.time()
+        r = run_minions(local, remote, task.context, task.query,
+                        MinionSConfig(max_rounds=1, num_tasks_per_round=1,
+                                      pages_per_chunk=1,
+                                      worker_max_tokens=48))
+        dt = time.time() - t0
+        usd = cm.usd(r.remote_usage)
+        total_cost += usd
+        print(f"req {i}: {dt * 1e3:7.0f}ms  jobs={r.rounds[0].num_jobs:3d} "
+              f"kept={r.rounds[0].num_kept:2d}  remote=${usd:.5f}  "
+              f"answer={'OK' if score_answer(r.answer, task.answer) else r.answer!r}")
+
+    print(f"\nengine: {engine.usage.calls} batches, "
+          f"{engine.usage.prefill_tokens:,} prefill tok, "
+          f"{engine.usage.decode_tokens:,} decode tok (all FREE per §3)")
+    print(f"total remote cost: ${total_cost:.5f}")
+
+
+if __name__ == "__main__":
+    main()

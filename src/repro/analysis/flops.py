@@ -1,0 +1,243 @@
+"""Analytic FLOP and HBM-byte models per (architecture × shape × mode).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Dry-run), so scanned-layer programs under-report by the
+trip count.  Since we wrote every matmul in the model, we count them
+exactly here instead; the HLO numbers are still recorded for reference.
+
+Conventions:
+  * FLOPs: 2·m·n·k per matmul; train = fwd + 2×bwd (+1× fwd recompute when
+    cfg.remat) = 3× (4× with remat).
+  * Attention FLOPs honour the masking structure (causal 1/2, sliding
+    window, block-diagonal chunks) — the quantity our Pallas kernel's tile
+    skipping realises.
+  * Bytes model the IMPLEMENTATION, not an ideal: e.g. the jnp decode path
+    materialises ``repeat_kv`` (q_per_kv × cache reads) and blocked
+    prefill attention re-reads KV once per q-block — both are explicit
+    hillclimb targets in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import InputShape, ModelConfig
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    flops: float          # total, all chips
+    hbm_bytes: float      # total, all chips
+
+    def per_chip(self, chips: int) -> "CostEstimate":
+        return CostEstimate(self.flops / chips, self.hbm_bytes / chips)
+
+
+def _dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+# --------------------------------------------------------------------------
+# per-layer forward FLOPs for a full sequence of length S (per batch row)
+# --------------------------------------------------------------------------
+
+
+def _attn_layer_flops(cfg: ModelConfig, s: int, kv_len=None) -> float:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    proj = 2 * s * d * (2 * nq + 2 * nkv)              # QKVO
+    if kv_len is None:
+        # causal self attention; window caps the span
+        if cfg.sliding_window:
+            span = min(cfg.sliding_window, s)
+            eff = s * span - span * (span - 1) / 2 if s <= span \
+                else span * (s - span / 2)
+        else:
+            eff = s * (s + 1) / 2
+    else:
+        eff = s * kv_len                                # cross attention
+    attn = 2 * 2 * eff * cfg.num_heads * hd             # scores + PV
+    return proj + attn
+
+
+def _ffn_layer_flops(cfg: ModelConfig, s: int) -> float:
+    d = cfg.d_model
+    if not cfg.d_ff:
+        return 0.0
+    if cfg.is_moe:
+        cap_tokens = s * cfg.num_experts_per_tok * cfg.expert_capacity_factor
+        expert = 2 * cap_tokens * d * cfg.d_ff * 3
+        router = 2 * s * d * cfg.num_experts
+        # dispatch/combine einsums (GSPMD expert-parallel formulation)
+        gs = min(1024, s)
+        cap = max(int(gs * cfg.num_experts_per_tok
+                      * cfg.expert_capacity_factor / cfg.num_experts), 4)
+        dispatch = 2 * 2 * s * cfg.num_experts * cap * d  # in + out
+        return expert + router + dispatch
+    return 2 * s * d * cfg.d_ff * 3
+
+
+def _mlstm_layer_flops(cfg: ModelConfig, s: int, chunk: int = 256) -> float:
+    d = cfg.d_model
+    inner = int(d * cfg.ssm_proj_factor)
+    hd = inner // cfg.num_heads
+    proj = 2 * s * d * (2 * inner) + 2 * s * inner * (3 * inner) \
+        + 2 * s * inner * d
+    c = min(chunk, s)
+    intra = 2 * 2 * s * c / 2 * inner          # chunk-causal scores + PV
+    state = 2 * 2 * s * inner * hd             # kv outer product + q·state
+    return proj + intra + state
+
+
+def _slstm_layer_flops(cfg: ModelConfig, s: int) -> float:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    ffn = ((int(d * 4 / 3) + 7) // 8) * 8
+    gates = 2 * s * d * 4 * d
+    rec = 2 * s * cfg.num_heads * hd * 4 * hd
+    mlp = 2 * s * d * ffn * 2
+    return gates + rec + mlp
+
+
+def _mamba_layer_flops(cfg: ModelConfig, s: int) -> float:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    inner = cfg.num_heads * hd
+    n = cfg.ssm_state
+    proj = 2 * s * d * 2 * inner + 2 * s * inner * inner \
+        + 2 * s * inner * 2 * n
+    scan = 6 * s * inner * n                     # decay·h + drive + C·h
+    conv = 2 * s * inner * 4
+    return proj + scan + conv
+
+
+def _layer_flops(cfg: ModelConfig, kind: str, s: int) -> float:
+    mem = (cfg.num_image_tokens if cfg.family == "vlm"
+           else cfg.num_audio_frames)
+    if kind == "attn":
+        f = _attn_layer_flops(cfg, s)
+        if cfg.is_encdec:
+            f += _attn_layer_flops(cfg, s, kv_len=mem)
+        return f + _ffn_layer_flops(cfg, s)
+    if kind == "cross":
+        return _attn_layer_flops(cfg, s, kv_len=mem) \
+            + _ffn_layer_flops(cfg, s)
+    if kind == "hybrid":
+        return _attn_layer_flops(cfg, s) + _mamba_layer_flops(cfg, s) \
+            + _ffn_layer_flops(cfg, s)
+    if kind == "mlstm":
+        return _mlstm_layer_flops(cfg, s)
+    if kind == "slstm":
+        return _slstm_layer_flops(cfg, s)
+    raise ValueError(kind)
+
+
+def forward_flops(cfg: ModelConfig, batch: int, s: int,
+                  include_encoder: bool = True) -> float:
+    total = sum(_layer_flops(cfg, cfg.layer_kind(i), s)
+                for i in range(cfg.num_layers))
+    if cfg.is_encdec and include_encoder:
+        m = cfg.num_audio_frames
+        enc_attn = 2 * m * cfg.d_model * 4 * cfg.num_heads \
+            * cfg.resolved_head_dim + 2 * 2 * m * m * cfg.num_heads \
+            * cfg.resolved_head_dim
+        enc = cfg.encoder_layers * (enc_attn
+                                    + 2 * m * cfg.d_model * cfg.d_ff * 2)
+        total += enc
+    total += 2 * s * cfg.d_model * cfg.vocab_size      # lm head
+    return batch * total
+
+
+# --------------------------------------------------------------------------
+# bytes
+# --------------------------------------------------------------------------
+
+
+def param_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * _dtype_bytes(cfg)
+
+
+def _activation_bytes(cfg: ModelConfig, batch: int, s: int) -> float:
+    """Per-layer activation read/write traffic (≈12 B·S·D touches) plus the
+    blocked-flash KV re-reads (nq passes over K and V)."""
+    d = cfg.d_model
+    bts = _dtype_bytes(cfg)
+    per_layer = 12 * batch * s * d * bts
+    if s > 2048:   # blocked attention path
+        q_block = 512
+        nq = s // q_block
+        kv_pass = 2 * batch * s * cfg.num_heads * cfg.resolved_head_dim \
+            * bts * nq
+        per_layer += kv_pass
+    return cfg.num_layers * per_layer
+
+
+def train_cost(cfg: ModelConfig, shape: InputShape) -> CostEstimate:
+    b, s = shape.global_batch, shape.seq_len
+    mult = 4.0 if cfg.remat else 3.0
+    flops = mult * forward_flops(cfg, b, s)
+    # params: read fwd + read bwd + grad write; adam: read m,v + write m,v,p
+    p32 = cfg.param_count() * 4
+    opt = 3 * param_bytes(cfg) + 5 * p32
+    act = (2 + (1 if cfg.remat else 0)) * _activation_bytes(cfg, b, s)
+    return CostEstimate(flops, opt + act)
+
+
+def prefill_cost(cfg: ModelConfig, shape: InputShape) -> CostEstimate:
+    b, s = shape.global_batch, shape.seq_len
+    flops = forward_flops(cfg, b, s)
+    bytes_ = param_bytes(cfg) + _activation_bytes(cfg, b, s) \
+        + cache_bytes(cfg, b, s)  # cache write
+    return CostEstimate(flops, bytes_)
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    hd = cfg.resolved_head_dim
+    bts = _dtype_bytes(cfg)
+    if cfg.kv_cache_dtype == "int8":
+        bts = 1 + 4 / hd  # int8 data + per-(slot, head) f32 scale
+    cap = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    total = 0.0
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if kind in ("attn", "hybrid"):
+            total += 2 * batch * cap * cfg.num_kv_heads * hd * bts
+        if kind == "cross" or (cfg.is_encdec and kind == "attn"):
+            mem = (cfg.num_image_tokens if cfg.family == "vlm"
+                   else cfg.num_audio_frames)
+            total += 2 * batch * mem * cfg.num_kv_heads * hd * bts
+        if kind == "hybrid":
+            total += batch * cfg.num_heads * hd * cfg.ssm_state * 4
+        if kind == "mlstm":
+            ihd = int(cfg.d_model * cfg.ssm_proj_factor) // cfg.num_heads
+            total += batch * cfg.num_heads * ihd * ihd * 4
+        if kind == "slstm":
+            total += 4 * batch * cfg.d_model * 4
+    return total
+
+
+def decode_cost(cfg: ModelConfig, shape: InputShape) -> CostEstimate:
+    """ONE token for every sequence in the batch, cache depth = seq_len.
+
+    The encoder does not run at decode (cross K/V are cached)."""
+    b, seq = shape.global_batch, shape.seq_len
+    flops = forward_flops(cfg, b, 1, include_encoder=False)
+    # attention vs the cache: 2·valid·Hq·hd per layer (scores + PV)
+    hd = cfg.resolved_head_dim
+    cap = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    n_attn = sum(cfg.layer_kind(i) in ("attn", "hybrid")
+                 for i in range(cfg.num_layers))
+    flops += b * n_attn * 2 * 2 * cap * cfg.num_heads * hd
+    # bytes: all params once + cache read (q_per_kv-repeated in the naive
+    # jnp path; grouped_decode reads each byte once) + cache write
+    rep = 1 if cfg.grouped_decode else cfg.q_per_kv
+    bytes_ = param_bytes(cfg) + rep * cache_bytes(cfg, b, seq) \
+        + b * 2 * cfg.num_kv_heads * hd * _dtype_bytes(cfg) \
+        * cfg.num_layers
+    return CostEstimate(flops, bytes_)
+
+
+def estimate(cfg: ModelConfig, shape: InputShape) -> CostEstimate:
+    if shape.mode == "train":
+        return train_cost(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_cost(cfg, shape)
+    return decode_cost(cfg, shape)

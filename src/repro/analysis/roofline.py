@@ -1,0 +1,222 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (DESIGN.md §7):
+
+  compute    = HLO_FLOPs            / peak_FLOP/s            (per chip)
+  memory     = HLO_bytes_accessed   / HBM_bw                 (per chip)
+  collective = collective_bytes     / link_bw                (per chip)
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD-partition)
+module, so terms are already per chip.  collective_bytes is NOT in
+cost_analysis — we parse the optimized HLO text and sum the *result* bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (the bytes that land in each device's
+memory per step).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types of an HLO instruction: `%x = f32[8,16]{1,0} all-reduce(...)`
+# or tuple `= (f32[8]{0}, f32[8]{0}) all-reduce(...)`
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _line_collective(line: str):
+    """(kind, result_bytes) if the line is a collective op, else None."""
+    stripped = line.strip()
+    if "=" not in stripped:
+        return None
+    _, _, rhs = stripped.partition("=")
+    rhs = rhs.strip()
+    m = re.match(r"(\([^)]*\)|\w+\[[0-9,]*\]\S*)\s+([a-z0-9-]+)", rhs)
+    if not m:
+        return None
+    opcode = m.group(2)
+    kind = next((c for c in _COLLECTIVES
+                 if opcode == c or opcode.startswith(c + ".")), None)
+    if kind is None:
+        return None
+    total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
+    return kind, total
+
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?(%?[\w.-]+)\s*(?:\([^)]*\))?\s*"
+                         r"(?:->\s*\S.*)?\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=(%?[\w.-]+), "
+                       r"body=(%?[\w.-]+)")
+_TRIP_RE = re.compile(r"s32\[\][^=]*constant\((\d+)\)")
+
+
+def collective_bytes(hlo_text: str,
+                     default_trip: int = 1) -> Dict[str, int]:
+    """Per-device result bytes of every collective op, by op kind.
+
+    Loop-aware: collectives inside a ``while`` body are multiplied by the
+    loop's trip count (recovered from the s32 constant in its condition
+    computation — scan-over-layers bodies are otherwise counted once).
+    """
+    # 1. split into computations
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START.match(line.strip())
+        if m and not line.startswith("  "):
+            cur = m.group(1).lstrip("%")
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # 2. per-computation collectives + while references
+    own: Dict[str, Dict[str, int]] = {}
+    whiles: Dict[str, list] = {}
+    for name, lines in comps.items():
+        own[name] = {c: 0 for c in _COLLECTIVES}
+        whiles[name] = []
+        for line in lines:
+            hit = _line_collective(line)
+            if hit:
+                own[name][hit[0]] += hit[1]
+            wm = _WHILE_RE.search(line)
+            if wm:
+                whiles[name].append((wm.group(1).lstrip("%"),
+                                     wm.group(2).lstrip("%")))
+
+    def trip_count(cond: str) -> int:
+        vals = [int(v) for line in comps.get(cond, [])
+                for v in _TRIP_RE.findall(line)]
+        return max(vals) if vals else default_trip
+
+    def roll(name: str, seen) -> Dict[str, int]:
+        if name in seen or name not in comps:
+            return {c: 0 for c in _COLLECTIVES}
+        seen = seen | {name}
+        total = dict(own.get(name, {c: 0 for c in _COLLECTIVES}))
+        for cond, body in whiles.get(name, []):
+            sub = roll(body, seen)
+            t = trip_count(cond)
+            for c in _COLLECTIVES:
+                total[c] += t * sub[c]
+        return total
+
+    if entry is None:
+        # fallback: flat count
+        flat = {c: 0 for c in _COLLECTIVES}
+        for line in hlo_text.splitlines():
+            hit = _line_collective(line)
+            if hit:
+                flat[hit[0]] += hit[1]
+        return flat
+    return roll(entry, frozenset())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # analytic, per chip (see analysis/flops.py)
+    bytes_accessed: float     # analytic, per chip
+    coll_bytes: float         # parsed from optimized HLO, per chip
+    coll_by_kind: Dict[str, int]
+    hlo_flops: float = 0.0    # raw cost_analysis (loop bodies counted once)
+    hlo_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.coll_bytes,
+            "collective_by_kind": self.coll_by_kind,
+            "hlo_flops_raw": self.hlo_flops,
+            "hlo_bytes_raw": self.hlo_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled, hlo_text: Optional[str] = None, *,
+            analytic=None, chips: int = 1) -> Roofline:
+    """analytic: CostEstimate from analysis/flops.py (global totals); when
+    provided it supplies the compute/memory terms (per chip), while the
+    collective term is always parsed from the compiled HLO."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    if analytic is not None:
+        flops = analytic.flops / chips
+        bytes_ = analytic.hbm_bytes / chips
+    else:
+        flops, bytes_ = hlo_flops, hlo_bytes
+    return Roofline(
+        flops=flops,
+        bytes_accessed=bytes_,
+        coll_bytes=float(sum(coll.values())),
+        coll_by_kind=coll,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+    )
+
+
+def model_flops(cfg, n_tokens: int, *, train: bool) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); forward-only = 2·N·D."""
+    n = cfg.active_param_count()
+    mult = 6 if train else 2
+    return mult * n * n_tokens

@@ -1,0 +1,5 @@
+from .registry import (ARCHS, get_config, get_smoke_config,
+                        long_context_variant, list_archs)
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config",
+           "long_context_variant", "list_archs"]

@@ -1,0 +1,14 @@
+"""Granite-34B-Code — llama-arch dense, MQA (kv_heads=1) [arXiv:2405.04324]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    source="arXiv:2405.04324",
+)

@@ -1,0 +1,24 @@
+"""Hymba-1.5B — hybrid parallel attention + mamba heads [arXiv:2411.13676].
+
+Each block runs GQA attention heads and Mamba SSM heads *in parallel* over
+the same input, head-normalised and mean-fused.  Hymba uses sliding-window
+attention in (almost) all layers with the SSM path carrying global state —
+we model that with window=2048 and ssm_state=16, which also makes the arch
+natively sub-quadratic for the long_500k shape.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    hybrid=True,
+    sliding_window=2048,
+    source="arXiv:2411.13676",
+)

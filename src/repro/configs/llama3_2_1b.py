@@ -1,0 +1,19 @@
+"""Llama-3.2-1B — small llama3 dense GQA [hf:meta-llama/Llama-3.2-1B].
+
+This is the paper's own LocalLM family (Table 1 uses Llama-3.2-1B/3B and
+Llama-3.1-8B on-device).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-3.2-1B",
+)

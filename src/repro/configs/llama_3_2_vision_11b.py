@@ -1,0 +1,24 @@
+"""Llama-3.2-11B-Vision — decoder with interleaved cross-attention image
+layers [hf:meta-llama/Llama-3.2-11B-Vision].
+
+The ViT vision encoder + projector is a STUB per the assignment carve-out:
+``input_specs`` provides pre-computed patch embeddings (B, 1600, d_model);
+every 5th decoder layer cross-attends to them through a tanh-gated
+cross-attention block.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    num_image_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

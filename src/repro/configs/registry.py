@@ -1,0 +1,104 @@
+"""Architecture registry: ``--arch <id>`` lookup, reduced smoke variants,
+long-context (sub-quadratic) variants, and dry-run input specs."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import InputShape, ModelConfig, get_input_shape
+
+from . import (granite_34b, granite_moe_1b_a400m, hymba_1_5b, llama3_2_1b,
+               llama_3_2_vision_11b, olmoe_1b_7b, qwen1_5_32b, whisper_small,
+               xlstm_350m, yi_6b)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (yi_6b, xlstm_350m, llama3_2_1b, granite_moe_1b_a400m,
+              olmoe_1b_7b, hymba_1_5b, llama_3_2_vision_11b, whisper_small,
+              granite_34b, qwen1_5_32b)
+}
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    return ARCHS[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """Reduced variant of the same family: 2 layers, d_model<=512,
+    <=4 experts — runs a real forward/train step on CPU."""
+    cfg = get_config(name)
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) or 1,
+        head_dim=64,
+        vocab_size=512,
+    )
+    if cfg.d_ff:
+        kw["d_ff"] = 512
+    if cfg.is_moe:
+        kw.update(num_experts=4, num_experts_per_tok=2)
+    if cfg.family == "ssm":
+        kw.update(slstm_every=2, num_kv_heads=4)  # layer0 mlstm, layer1 slstm
+    if cfg.family == "vlm":
+        kw.update(cross_attn_every=2, num_image_tokens=16)
+    if cfg.is_encdec:
+        kw.update(encoder_layers=2, num_audio_frames=32)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    return cfg.replace(**kw)
+
+
+# archs that are natively sub-quadratic at decode (SSM state or built-in SWA)
+_NATIVE_SUBQUADRATIC = {"xlstm-350m", "hymba-1.5b"}
+LONG_CONTEXT_WINDOW = 8192
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant for the long_500k shape.
+
+    Pure full-attention archs get a sliding-window (8192) attention cache —
+    the documented sub-quadratic carve-out in DESIGN.md; SSM/hybrid archs
+    are returned unchanged (their state is already O(1)/windowed).
+    """
+    if cfg.name in _NATIVE_SUBQUADRATIC or cfg.family == "ssm":
+        return cfg
+    return cfg.replace(name=cfg.name + "-swa",
+                       sliding_window=LONG_CONTEXT_WINDOW)
+
+
+# ===========================================================================
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ===========================================================================
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, *, for_train: bool):
+    """ShapeDtypeStructs for every model input of (cfg, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if for_train:
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        specs["image_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), f32)
+    if cfg.is_encdec:
+        specs["enc_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_audio_frames, cfg.d_model), f32)
+    return specs
+
+
+def decode_batch_struct(cfg: ModelConfig, shape: InputShape):
+    """Decode = ONE new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

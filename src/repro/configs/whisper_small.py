@@ -1,0 +1,23 @@
+"""Whisper-small — encoder-decoder audio model [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: ``input_specs`` provides pre-computed frame embeddings
+(B, 1500, d_model) consumed by the transformer encoder; every decoder layer
+cross-attends to the encoder output.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    encoder_layers=12,
+    num_audio_frames=1500,
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

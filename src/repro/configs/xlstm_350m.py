@@ -1,0 +1,21 @@
+"""xLSTM-350M — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+d_ff=0: xLSTM blocks carry their own up/down projections.  Every 4th block
+is an sLSTM (scalar memory with hidden feedback); the rest are mLSTM
+(matrix memory, chunkwise-parallel gated-linear-attention form).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=4,
+    ssm_proj_factor=2.0,
+    source="arXiv:2405.04517",
+)

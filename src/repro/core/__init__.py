@@ -1,0 +1,13 @@
+"""The paper's contribution: local-remote collaboration protocols."""
+from .baselines import run_local_only, run_remote_only
+from .cost import GPT4O_JAN2025, CostModel, PriceTable
+from .minion import MinionConfig, run_minion
+from .minions import MinionSConfig, run_minions
+from .rag import run_rag
+from .types import JobManifest, JobOutput, ProtocolResult, Usage
+
+__all__ = [
+    "run_minion", "run_minions", "run_remote_only", "run_local_only",
+    "run_rag", "MinionConfig", "MinionSConfig", "CostModel", "PriceTable",
+    "GPT4O_JAN2025", "JobManifest", "JobOutput", "ProtocolResult", "Usage",
+]

@@ -1,0 +1,26 @@
+"""Remote-only and local-only baselines (paper Table 1 rows 1–5)."""
+from __future__ import annotations
+
+from .clients import UsageMeter
+from .prompts import render_direct
+from .types import ProtocolResult, Usage
+from repro.serving.tokenizer import approx_tokens
+
+
+def run_remote_only(remote, context: str, query: str,
+                    max_tokens: int = 256) -> ProtocolResult:
+    remote = UsageMeter(remote)
+    prompt = render_direct(context, query)
+    out = remote.complete(prompt, max_tokens=max_tokens)
+    return ProtocolResult(answer=out, remote_usage=remote.usage,
+                          transcript=[{"role": "remote", "text": out}])
+
+
+def run_local_only(local, context: str, query: str,
+                   max_tokens: int = 256) -> ProtocolResult:
+    prompt = render_direct(context, query)
+    out = local.complete(prompt, max_tokens=max_tokens)
+    return ProtocolResult(answer=out, remote_usage=Usage(),
+                          local_prefill_tokens=approx_tokens(prompt),
+                          local_decode_tokens=approx_tokens(out),
+                          transcript=[{"role": "local", "text": out}])

@@ -1,0 +1,64 @@
+"""Context chunking utilities exposed to remote-generated decompose code.
+
+These are the exact helpers the paper's decompose prompt advertises
+("You can assume you have access to the following chunking function(s)").
+Documents are plain strings; pages are separated by form-feed ("\\f") or a
+fixed character budget when no page markers exist.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAGE_SEP = "\f"
+DEFAULT_PAGE_CHARS = 2000
+
+
+def split_pages(doc: str, page_chars: int = DEFAULT_PAGE_CHARS) -> List[str]:
+    if PAGE_SEP in doc:
+        return [p for p in doc.split(PAGE_SEP) if p.strip()]
+    return [doc[i:i + page_chars] for i in range(0, len(doc), page_chars)] \
+        or [""]
+
+
+def chunk_by_page(doc: str) -> List[str]:
+    return split_pages(doc)
+
+
+def chunk_on_multiple_pages(doc: str, pages_per_chunk: int = 5) -> List[str]:
+    pages = split_pages(doc)
+    return [PAGE_SEP.join(pages[i:i + pages_per_chunk])
+            for i in range(0, len(pages), pages_per_chunk)]
+
+
+def chunk_by_section(doc: str) -> List[str]:
+    """Split on blank-line separated sections, merging tiny ones."""
+    raw = [s for s in doc.replace(PAGE_SEP, "\n\n").split("\n\n") if s.strip()]
+    sections: List[str] = []
+    buf = ""
+    for s in raw:
+        buf = (buf + "\n\n" + s) if buf else s
+        if len(buf) >= 400:
+            sections.append(buf)
+            buf = ""
+    if buf:
+        sections.append(buf)
+    return sections or [""]
+
+
+def chunk_by_chars(doc: str, chars: int = 1000) -> List[str]:
+    return [doc[i:i + chars] for i in range(0, len(doc), chars)] or [""]
+
+
+CHUNKING_FUNCTIONS = {
+    "chunk_by_page": chunk_by_page,
+    "chunk_on_multiple_pages": chunk_on_multiple_pages,
+    "chunk_by_section": chunk_by_section,
+    "chunk_by_chars": chunk_by_chars,
+}
+
+CHUNKING_SOURCE = """\
+def chunk_by_page(doc: str) -> list[str]: ...
+def chunk_on_multiple_pages(doc: str, pages_per_chunk: int = 5) -> list[str]: ...
+def chunk_by_section(doc: str) -> list[str]: ...
+def chunk_by_chars(doc: str, chars: int = 1000) -> list[str]: ...
+"""

@@ -1,0 +1,92 @@
+"""LM client interfaces.
+
+Every model that participates in a protocol — a real JAX model behind the
+serving engine, or a calibrated simulator — implements ``complete`` /
+``complete_batch``.  Protocols meter usage on the *strings* that cross the
+local/remote boundary, so cost accounting is identical for all clients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, Sequence
+
+from repro.serving.tokenizer import approx_tokens
+
+from .types import Usage
+
+
+class LMClient(Protocol):
+    name: str
+
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 256) -> str: ...
+
+    def complete_batch(self, prompts: Sequence[str], *,
+                       temperature: float = 0.0,
+                       max_tokens: int = 256) -> List[str]: ...
+
+
+@dataclasses.dataclass
+class MeteredCall:
+    prompt_tokens: int
+    completion_tokens: int
+
+
+class UsageMeter:
+    """Counts prefill/decode tokens of every call through a client."""
+
+    def __init__(self, client):
+        self.client = client
+        self.usage = Usage()
+        self.calls: List[MeteredCall] = []
+
+    @property
+    def name(self):
+        return self.client.name
+
+    def complete(self, prompt: str, **kw) -> str:
+        out = self.client.complete(prompt, **kw)
+        c = MeteredCall(approx_tokens(prompt), approx_tokens(out))
+        self.calls.append(c)
+        self.usage.add(c.prompt_tokens, c.completion_tokens)
+        return out
+
+    def complete_batch(self, prompts: Sequence[str], **kw) -> List[str]:
+        if hasattr(self.client, "complete_batch"):
+            outs = self.client.complete_batch(prompts, **kw)
+        else:
+            outs = [self.client.complete(p, **kw) for p in prompts]
+        for p, o in zip(prompts, outs):
+            c = MeteredCall(approx_tokens(p), approx_tokens(o))
+            self.calls.append(c)
+            self.usage.add(c.prompt_tokens, c.completion_tokens)
+        return outs
+
+
+class EngineClient:
+    """A real JAX model served by repro.serving.InferenceEngine."""
+
+    def __init__(self, engine, name: str = "engine", *, seed: int = 0,
+                 max_batch: int = 8):
+        self.engine = engine
+        self.name = name
+        self.seed = seed
+        self.max_batch = max_batch
+
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 256) -> str:
+        return self.complete_batch([prompt], temperature=temperature,
+                                   max_tokens=max_tokens)[0]
+
+    def complete_batch(self, prompts: Sequence[str], *,
+                       temperature: float = 0.0,
+                       max_tokens: int = 256) -> List[str]:
+        import jax
+        outs: List[str] = []
+        key = jax.random.PRNGKey(self.seed)
+        for off in range(0, len(prompts), self.max_batch):
+            key, sub = jax.random.split(key)
+            outs.extend(self.engine.generate_batch(
+                list(prompts[off:off + self.max_batch]),
+                max_new_tokens=max_tokens, temperature=temperature, key=sub))
+        return outs

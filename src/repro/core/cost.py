@@ -1,0 +1,47 @@
+"""Cost model (paper §3): C_remote ∝ n_prefill + α·n_decode, local is free.
+
+Prices default to the paper's January-2025 GPT-4o rates so USD figures are
+directly comparable with Tables 1/6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .types import Usage
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceTable:
+    name: str
+    usd_per_m_prefill: float
+    usd_per_m_decode: float
+
+    @property
+    def alpha(self) -> float:
+        """Decode-vs-prefill price ratio (paper: α ≈ 1–5)."""
+        return self.usd_per_m_decode / self.usd_per_m_prefill
+
+
+GPT4O_JAN2025 = PriceTable("gpt-4o (Jan 2025)", 2.50, 10.00)
+GPT4O_MINI = PriceTable("gpt-4o-mini", 0.15, 0.60)
+O1 = PriceTable("o1", 15.00, 60.00)
+
+PRICES: Dict[str, PriceTable] = {p.name: p for p in
+                                 (GPT4O_JAN2025, GPT4O_MINI, O1)}
+
+
+@dataclasses.dataclass
+class CostModel:
+    prices: PriceTable = GPT4O_JAN2025
+
+    def usd(self, usage: Usage) -> float:
+        return (usage.prefill_tokens * self.prices.usd_per_m_prefill
+                + usage.decode_tokens * self.prices.usd_per_m_decode) / 1e6
+
+    def usd_from_tokens(self, prefill: int, decode: int) -> float:
+        return self.usd(Usage(prefill, decode))
+
+    def reduction_factor(self, baseline: Usage, system: Usage) -> float:
+        base, sys_ = self.usd(baseline), self.usd(system)
+        return float("inf") if sys_ == 0 else base / sys_

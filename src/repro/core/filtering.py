@@ -1,0 +1,27 @@
+"""Local-side output filtering (paper §5.1 step 2): drop abstentions so only
+informative results are uploaded, dedup identical answers per task."""
+from __future__ import annotations
+
+from typing import List
+
+from .types import JobOutput
+
+
+def filter_outputs(outputs: List[JobOutput], *,
+                   max_per_task: int = 16) -> List[JobOutput]:
+    kept: List[JobOutput] = []
+    seen = set()
+    per_task: dict = {}
+    for o in outputs:
+        if o.abstained:
+            continue
+        tid = o.job.task_id if o.job else -1
+        sig = (tid, (o.answer or "").strip())
+        if sig in seen:
+            continue
+        seen.add(sig)
+        if per_task.get(tid, 0) >= max_per_task:
+            continue
+        per_task[tid] = per_task.get(tid, 0) + 1
+        kept.append(o)
+    return kept

@@ -1,0 +1,125 @@
+"""Analytic latency models (paper Appendix C).
+
+Closed-form prefill/decode latency for the remote-only, Minion and MinionS
+protocols, plus Proposition C.1's upper bound on the MinionS/remote-only
+latency ratio.  The paper's worked example (Llama-8B on an RTX-4090
+collaborating with Llama-405B on 8×H100 ⇒ ratio < 4.75×) is reproduced in
+tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    flops: float     # peak flops/sec (half precision)
+    bandwidth: float  # bytes/sec
+
+RTX_4090 = GPUSpec("rtx-4090", 160e12, 1.01e12)
+H100_NODE = GPUSpec("8xH100", 8000e12, 8 * 3.35e12)
+TPU_V5E = GPUSpec("tpu-v5e", 197e12, 819e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    """Simple-transformer shape used by App. C (L layers, hidden d)."""
+    name: str
+    layers: int
+    d_model: int
+
+    @property
+    def params_memory(self) -> float:
+        """Non-embedding parameter bytes: P = 2 · 12 L d² (half precision)."""
+        return 2 * 12 * self.layers * self.d_model ** 2
+
+
+LLAMA_8B = LMShape("llama-8b", 32, 4096)
+LLAMA_405B = LMShape("llama-405b", 126, 16384)
+
+
+# --------------------------------------------------------------------------
+# §C.2.1 remote-only
+# --------------------------------------------------------------------------
+
+
+def remote_only_latency(m: LMShape, hw: GPUSpec, n: int,
+                        n_out: int) -> float:
+    p = m.params_memory
+    prefill = (n * p + 2 * m.layers * m.d_model * n ** 2) / hw.flops
+    decode = n_out * (p + 4 * m.layers * m.d_model * n) / hw.bandwidth
+    return prefill + decode
+
+
+# --------------------------------------------------------------------------
+# §C.2.2 Minion
+# --------------------------------------------------------------------------
+
+
+def minion_local_latency(m: LMShape, hw: GPUSpec, n: int,
+                         n_out_local: int) -> float:
+    return remote_only_latency(m, hw, n, n_out_local)
+
+
+def minion_remote_latency(m: LMShape, hw: GPUSpec, n_out_local: int,
+                          n_out_remote: int) -> float:
+    return remote_only_latency(m, hw, n_out_local, n_out_remote)
+
+
+# --------------------------------------------------------------------------
+# §C.2.3 MinionS
+# --------------------------------------------------------------------------
+
+
+def minions_local_latency(m: LMShape, hw: GPUSpec, n: int, *, c: int, k: int,
+                          s: int, p_keep: float, n_out_local: int) -> float:
+    """c chunks, k tasks, s samples, fraction p_keep of jobs answer.
+
+    Prefill avoids cross-chunk attention (2n²d/c); decode is compute bound
+    because the c·k·s jobs are batched.
+    """
+    pm = m.params_memory
+    prefill = (n * pm + 2 * m.layers * m.d_model * n ** 2 / c) / hw.flops
+    decode = (n_out_local * p_keep * c * k * s
+              * (pm + 2 * m.layers * m.d_model * n / c)) / hw.flops
+    return prefill + decode
+
+
+def minions_remote_latency(m: LMShape, hw: GPUSpec, *, c: int, k: int,
+                           s: int, p_keep: float, n_out_local: int,
+                           n_out_remote: int) -> float:
+    n_up = p_keep * c * k * s * n_out_local
+    pm = m.params_memory
+    prefill = (n_up * pm + 2 * m.layers * m.d_model * n_up ** 2) / hw.flops
+    decode = n_out_remote * (pm + 4 * m.layers * m.d_model * n_up) \
+        / hw.bandwidth
+    return prefill + decode
+
+
+# --------------------------------------------------------------------------
+# Proposition C.1
+# --------------------------------------------------------------------------
+
+
+def prop_c1_bound(local: LMShape, remote: LMShape, local_hw: GPUSpec,
+                  remote_hw: GPUSpec, a: float) -> float:
+    """Upper bound on (T_minions_remote + T_minions_local) / T_remote."""
+    return 1.0 + (1.0 + a) * (remote_hw.flops / local_hw.flops) \
+        * (local.layers * local.d_model) / (remote.layers * remote.d_model)
+
+
+def minions_latency_ratio(local: LMShape, remote: LMShape,
+                          local_hw: GPUSpec, remote_hw: GPUSpec, *,
+                          n: int, c: int, k: int, s: int, p_keep: float,
+                          n_out_local: int, n_out_remote: int) -> float:
+    """Exact model ratio — must always sit below prop_c1_bound when
+    a = p·c·k·s·n_out_local / n < 1 (property-tested)."""
+    t_local = minions_local_latency(local, local_hw, n, c=c, k=k, s=s,
+                                    p_keep=p_keep, n_out_local=n_out_local)
+    t_remote = minions_remote_latency(remote, remote_hw, c=c, k=k, s=s,
+                                      p_keep=p_keep,
+                                      n_out_local=n_out_local,
+                                      n_out_remote=n_out_remote)
+    t_base = remote_only_latency(remote, remote_hw, n, n_out_remote)
+    return (t_local + t_remote) / t_base

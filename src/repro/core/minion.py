@@ -1,0 +1,79 @@
+"""The MINION protocol (paper §4): naïve free-form local↔remote chat.
+
+Only the local model reads the full context; the remote model steers the
+conversation and decides when it can answer."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from .clients import UsageMeter
+from .prompts import (render_minion_local, render_minion_remote_continue,
+                      render_minion_remote_init)
+from .types import ProtocolResult, RoundRecord, Usage, extract_json
+from repro.serving.tokenizer import approx_tokens
+
+
+@dataclasses.dataclass
+class MinionConfig:
+    max_rounds: int = 3
+    local_max_tokens: int = 256
+    remote_max_tokens: int = 256
+
+
+def run_minion(local, remote, context: str, query: str,
+               cfg: Optional[MinionConfig] = None) -> ProtocolResult:
+    cfg = cfg or MinionConfig()
+    remote = UsageMeter(remote)
+    local_prefill = 0
+    local_decode = 0
+    rounds: List[RoundRecord] = []
+    transcript = []
+    history_lines: List[str] = []
+    answer: Optional[str] = None
+
+    # -- iteration 1: remote initialises -----------------------------------
+    init_prompt = render_minion_remote_init(query)
+    message = remote.complete(init_prompt, max_tokens=cfg.remote_max_tokens)
+    transcript.append({"role": "remote", "round": 0, "text": message})
+
+    for rnd in range(cfg.max_rounds):
+        usage_before = (remote.usage.prefill_tokens,
+                        remote.usage.decode_tokens)
+        rec = RoundRecord(round_index=rnd)
+
+        # -- local reads the document and replies --------------------------
+        local_prompt = render_minion_local(context, query, message)
+        response = local.complete(local_prompt,
+                                  max_tokens=cfg.local_max_tokens)
+        local_prefill += approx_tokens(local_prompt)
+        local_decode += approx_tokens(response)
+        transcript.append({"role": "local", "round": rnd, "text": response})
+        history_lines.append(f"remote: {message}")
+        history_lines.append(f"local: {response}")
+
+        # -- remote decides -------------------------------------------------
+        cont_prompt = render_minion_remote_continue(
+            query, response, "\n".join(history_lines[:-2]))
+        decision_text = remote.complete(cont_prompt,
+                                        max_tokens=cfg.remote_max_tokens)
+        transcript.append({"role": "remote", "round": rnd,
+                           "text": decision_text})
+        data = extract_json(decision_text) or {}
+        rec.decision = str(data.get("decision", ""))
+        rec.remote_usage = Usage(
+            remote.usage.prefill_tokens - usage_before[0],
+            remote.usage.decode_tokens - usage_before[1])
+        rounds.append(rec)
+
+        if rec.decision == "provide_final_answer" \
+                or rnd == cfg.max_rounds - 1:
+            ans = data.get("answer")
+            answer = None if ans is None else str(ans)
+            break
+        message = str(data.get("message", "Please continue."))
+
+    return ProtocolResult(answer=answer, remote_usage=remote.usage,
+                          local_prefill_tokens=local_prefill,
+                          local_decode_tokens=local_decode,
+                          rounds=rounds, transcript=transcript)

@@ -1,0 +1,131 @@
+"""The MINIONS protocol (paper §5): decompose → execute → aggregate loop."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from .clients import UsageMeter
+from .filtering import filter_outputs
+from .prompts import (format_extractions, render_decompose, render_synthesize,
+                      render_worker)
+from .sandbox import SandboxError, run_decompose_code
+from .types import (JobManifest, JobOutput, ProtocolResult, RoundRecord,
+                    Usage, extract_code, extract_json)
+from repro.serving.tokenizer import approx_tokens
+
+
+@dataclasses.dataclass
+class MinionSConfig:
+    max_rounds: int = 3
+    num_tasks_per_round: int = 3       # §6.3 knob 1
+    num_samples: int = 1               # §6.3 knob 2 (repeat sampling)
+    pages_per_chunk: int = 5           # §6.3 knob 3 (chunking granularity)
+    context_strategy: str = "scratchpad"  # "scratchpad" | "retries"
+    max_jobs: int = 512
+    worker_temperature: float = 0.2
+    worker_max_tokens: int = 256
+
+
+def run_minions(local, remote, context: str, query: str,
+                cfg: Optional[MinionSConfig] = None) -> ProtocolResult:
+    """Run MinionS for one (context, query) task.
+
+    ``local`` / ``remote`` are LMClients; remote usage is metered (costed),
+    local usage is tracked but free (§3).
+    """
+    cfg = cfg or MinionSConfig()
+    remote = UsageMeter(remote)
+    local_prefill = 0
+    local_decode = 0
+    rounds: List[RoundRecord] = []
+    transcript = []
+    scratchpad = ""
+    last_jobs: Optional[List[JobManifest]] = None
+    answer: Optional[str] = None
+
+    for rnd in range(cfg.max_rounds):
+        rec = RoundRecord(round_index=rnd)
+        force_final = rnd == cfg.max_rounds - 1
+        usage_before = (remote.usage.prefill_tokens,
+                        remote.usage.decode_tokens)
+
+        # -- Step 1: job preparation on remote (code generation) ----------
+        dec_prompt = render_decompose(query, rnd + 1, scratchpad,
+                                      cfg.pages_per_chunk,
+                                      cfg.num_tasks_per_round)
+        code_text = remote.complete(dec_prompt, max_tokens=1024)
+        transcript.append({"role": "remote/decompose", "round": rnd,
+                           "text": code_text})
+        code = extract_code(code_text)
+        try:
+            if code is None:
+                raise SandboxError("no code block in decompose response")
+            jobs = run_decompose_code(code, context, last_jobs,
+                                      max_jobs=cfg.max_jobs)
+        except SandboxError as e:
+            transcript.append({"role": "system", "round": rnd,
+                               "text": f"sandbox error: {e}"})
+            jobs = _fallback_jobs(context, query, cfg)
+        rec.num_jobs = len(jobs)
+
+        # -- Step 2: execute locally in parallel + filter ------------------
+        worker_prompts = [render_worker(j) for j in jobs
+                          for _ in range(cfg.num_samples)]
+        raw = local.complete_batch(worker_prompts,
+                                   temperature=cfg.worker_temperature,
+                                   max_tokens=cfg.worker_max_tokens)
+        local_prefill += sum(approx_tokens(p) for p in worker_prompts)
+        local_decode += sum(approx_tokens(o) for o in raw)
+        outputs: List[JobOutput] = []
+        idx = 0
+        for j in jobs:
+            for si in range(cfg.num_samples):
+                outputs.append(JobOutput.from_json_text(raw[idx], job=j,
+                                                        sample_index=si))
+                idx += 1
+        kept = filter_outputs(outputs)
+        rec.num_kept = len(kept)
+
+        # -- Step 3: aggregate on remote -----------------------------------
+        syn_prompt = render_synthesize(query, format_extractions(kept),
+                                       scratchpad, force_final)
+        syn_text = remote.complete(syn_prompt, max_tokens=512)
+        transcript.append({"role": "remote/synthesize", "round": rnd,
+                           "text": syn_text})
+        data = extract_json(syn_text) or {}
+        rec.decision = str(data.get("decision", ""))
+        rec.remote_usage = Usage(
+            remote.usage.prefill_tokens - usage_before[0],
+            remote.usage.decode_tokens - usage_before[1])
+        rounds.append(rec)
+
+        if rec.decision == "provide_final_answer" or force_final:
+            answer = data.get("answer")
+            answer = None if answer is None else str(answer)
+            break
+
+        # -- carry context between rounds (§5.2 sequential protocol) -------
+        explanation = str(data.get("explanation", ""))
+        if cfg.context_strategy == "scratchpad":
+            scratchpad = (scratchpad + "\n" + explanation).strip()
+        else:  # simple retries: only the last advice carries over
+            scratchpad = explanation
+        last_jobs = jobs
+
+    return ProtocolResult(answer=answer, remote_usage=remote.usage,
+                          local_prefill_tokens=local_prefill,
+                          local_decode_tokens=local_decode,
+                          rounds=rounds, transcript=transcript)
+
+
+def _fallback_jobs(context: str, query: str,
+                   cfg: MinionSConfig) -> List[JobManifest]:
+    """Deterministic protocol-level fallback when remote code is unusable:
+    one generic extraction task per chunk."""
+    from .chunking import chunk_on_multiple_pages
+    chunks = chunk_on_multiple_pages(context,
+                                     pages_per_chunk=cfg.pages_per_chunk)
+    task = (f"Find any figures relevant to this question: {query} "
+            f"Abstain if nothing relevant is present.")
+    return [JobManifest(chunk_id=str(i), task_id=0, chunk=c, task=task)
+            for i, c in enumerate(chunks)][:cfg.max_jobs]

@@ -1,0 +1,211 @@
+"""Prompt templates (condensed from the paper's Appendix F).
+
+Section markers (### Query / ### Outputs / etc.) are stable so that both
+LLM-backed and scripted clients can parse them.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .chunking import CHUNKING_SOURCE
+from .types import JobManifest, JobOutput
+
+# --------------------------------------------------------------------------
+# MinionS
+# --------------------------------------------------------------------------
+
+DECOMPOSE_TEMPLATE = """\
+# Decomposition Round #{round_number}
+
+You do not have access to the raw document(s), but instead can assign tasks
+to small and less capable language models that can read the document(s).
+The document(s) can be very long, so each task should be performed only over
+a small chunk of text.  Make sure that NONE of the tasks require multiple
+steps.  Each task should be atomic!
+
+Write a Python function `prepare_jobs(context, last_jobs)` that outputs
+formatted tasks for a small language model as a list of JobManifest.
+Please use chunks of {pages_per_chunk} pages via
+`chunk_on_multiple_pages(doc, pages_per_chunk={pages_per_chunk})`.
+Create at most {num_tasks} distinct tasks per round.
+
+Assume `JobManifest(chunk_id, task_id, chunk, task, advice)` is in scope.
+DO NOT import anything.  Available chunking functions:
+
+{chunking_source}
+### Query
+{query}
+
+### Scratchpad
+{scratchpad}
+"""
+
+WORKER_TEMPLATE = """\
+Your job is to complete the following task using only the context below. The
+context is a chunk of text taken arbitrarily from a document; it might or
+might not contain relevant information to the task.
+
+## Document
+{chunk}
+
+## Task
+{task}
+{advice}
+
+Return your result in JSON with keys "explanation", "citation", "answer".
+If you cannot determine the information confidently from this chunk, respond
+with "None" for all fields.
+"""
+
+SYNTHESIZE_TEMPLATE = """\
+Now synthesize the findings from multiple junior workers (LLMs).  Finalize
+an answer to the question below **if and only if** you have sufficient,
+reliable information; otherwise request additional work.
+
+### Query
+{query}
+
+### Outputs
+{extractions}
+
+### Scratchpad
+{scratchpad}
+
+## ANSWER GUIDELINES
+Output exactly one JSON object with keys:
+ - "decision": "provide_final_answer" OR "request_additional_info"
+ - "explanation": short statement of reasoning or what is missing
+ - "answer": final answer string or null
+{force_clause}
+"""
+
+FORCE_FINAL = ("\nThis is the FINAL round: you MUST set decision to "
+               "\"provide_final_answer\" and give your best answer.\n")
+
+
+def render_decompose(query: str, round_number: int, scratchpad: str,
+                     pages_per_chunk: int, num_tasks: int) -> str:
+    return DECOMPOSE_TEMPLATE.format(
+        round_number=round_number, query=query,
+        scratchpad=scratchpad or "(empty)",
+        pages_per_chunk=pages_per_chunk, num_tasks=num_tasks,
+        chunking_source=CHUNKING_SOURCE)
+
+
+def render_worker(job: JobManifest) -> str:
+    advice = f"\n## Advice\n{job.advice}" if job.advice else ""
+    return WORKER_TEMPLATE.format(chunk=job.chunk, task=job.task,
+                                  advice=advice)
+
+
+def format_extractions(outputs: List[JobOutput]) -> str:
+    lines = []
+    for i, o in enumerate(outputs):
+        task = o.job.task if o.job else "?"
+        tid = o.job.task_id if o.job else -1
+        lines.append(f"[job {i} | task_id {tid}] task: {task}\n"
+                     f"  answer: {o.answer}\n"
+                     f"  citation: {o.citation}\n"
+                     f"  explanation: {o.explanation}")
+    return "\n".join(lines) if lines else "(no surviving job outputs)"
+
+
+def render_synthesize(query: str, extractions: str, scratchpad: str,
+                      force_final: bool) -> str:
+    return SYNTHESIZE_TEMPLATE.format(
+        query=query, extractions=extractions,
+        scratchpad=scratchpad or "(empty)",
+        force_clause=FORCE_FINAL if force_final else "")
+
+
+# --------------------------------------------------------------------------
+# Minion (naïve chat)
+# --------------------------------------------------------------------------
+
+MINION_REMOTE_INIT = """\
+We need to perform the following task.
+
+### Query
+{query}
+
+### Instructions
+You will not have direct access to the context, but can chat with a small
+language model which has read the entire thing.  Ask it for what you need.
+Feel free to think step-by-step, but eventually you must provide an output
+as a single message to the small model.
+"""
+
+MINION_REMOTE_CONTINUE = """\
+Here is the response from the small language model:
+
+### Response
+{response}
+
+### Query
+{query}
+
+### Conversation so far
+{history}
+
+### Instructions
+Analyze the response and decide whether you have enough information.
+If yes output:
+```json
+{{"decision": "provide_final_answer", "answer": "<your answer>"}}
+```
+Otherwise output:
+```json
+{{"decision": "request_additional_info", "message": "<your message to the small LM>"}}
+```
+"""
+
+MINION_LOCAL_TEMPLATE = """\
+You will help a user answer the following question based on a document.
+
+### Document
+{context}
+
+### Query
+{query}
+
+### Message from the expert
+{message}
+
+Answer the expert's message concisely, based only on the document.
+"""
+
+
+def render_minion_remote_init(query: str) -> str:
+    return MINION_REMOTE_INIT.format(query=query)
+
+
+def render_minion_remote_continue(query: str, response: str,
+                                  history: str) -> str:
+    return MINION_REMOTE_CONTINUE.format(query=query, response=response,
+                                         history=history or "(start)")
+
+
+def render_minion_local(context: str, query: str, message: str) -> str:
+    return MINION_LOCAL_TEMPLATE.format(context=context, query=query,
+                                        message=message)
+
+
+# --------------------------------------------------------------------------
+# baselines
+# --------------------------------------------------------------------------
+
+DIRECT_TEMPLATE = """\
+Read the document below and answer the question.
+
+### Document
+{context}
+
+### Query
+{query}
+
+Answer concisely with only the final answer.
+"""
+
+
+def render_direct(context: str, query: str) -> str:
+    return DIRECT_TEMPLATE.format(context=context, query=query)

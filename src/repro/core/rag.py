@@ -1,0 +1,68 @@
+"""Retrieval-augmented generation baseline (paper §6.5): BM25 retrieval over
+character chunks, retrieved chunks handed to the remote model."""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import Counter
+from typing import List, Sequence
+
+from .baselines import run_remote_only
+from .chunking import chunk_by_chars
+from .types import ProtocolResult
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+
+def _terms(text: str) -> List[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+@dataclasses.dataclass
+class BM25:
+    """Okapi BM25 (Robertson & Zaragoza 2009)."""
+    docs: Sequence[str]
+    k1: float = 1.5
+    b: float = 0.75
+
+    def __post_init__(self):
+        self._doc_terms = [_terms(d) for d in self.docs]
+        self._doc_len = [len(t) for t in self._doc_terms]
+        self._avg_len = (sum(self._doc_len) / len(self.docs)
+                         if self.docs else 1.0)
+        df: Counter = Counter()
+        for terms in self._doc_terms:
+            df.update(set(terms))
+        n = len(self.docs)
+        self._idf = {t: math.log(1 + (n - d + 0.5) / (d + 0.5))
+                     for t, d in df.items()}
+        self._tf = [Counter(t) for t in self._doc_terms]
+
+    def score(self, query: str, doc_index: int) -> float:
+        tf = self._tf[doc_index]
+        dl = self._doc_len[doc_index] or 1
+        s = 0.0
+        for term in _terms(query):
+            if term not in tf:
+                continue
+            idf = self._idf.get(term, 0.0)
+            f = tf[term]
+            s += idf * f * (self.k1 + 1) / (
+                f + self.k1 * (1 - self.b + self.b * dl / self._avg_len))
+        return s
+
+    def top_k(self, query: str, k: int) -> List[int]:
+        scores = [(self.score(query, i), i) for i in range(len(self.docs))]
+        scores.sort(reverse=True)
+        return [i for _, i in scores[:k]]
+
+
+def run_rag(remote, context: str, query: str, *, chunk_chars: int = 1000,
+            top_k: int = 10, max_tokens: int = 256) -> ProtocolResult:
+    """Retrieve top_k chunks by BM25 and ask the remote over them only."""
+    chunks = chunk_by_chars(context, chunk_chars)
+    bm25 = BM25(chunks)
+    idx = sorted(bm25.top_k(query, top_k))
+    retrieved = "\n...\n".join(chunks[i] for i in idx)
+    return run_remote_only(remote, retrieved, query, max_tokens=max_tokens)

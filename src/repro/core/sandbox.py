@@ -1,0 +1,97 @@
+"""Sandboxed execution of remote-generated decomposition code.
+
+The remote model never sees the raw context; instead it emits Python source
+for ``prepare_jobs(context, last_jobs) -> list[JobManifest]`` which is
+executed *locally, where the document lives* (paper §5.1 Step 1).  The
+namespace is restricted to the advertised chunking helpers, the JobManifest
+model and a small builtin whitelist.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .chunking import CHUNKING_FUNCTIONS
+from .types import JobManifest
+
+
+class SandboxError(RuntimeError):
+    pass
+
+
+_SAFE_BUILTINS = {
+    "len": len, "range": range, "enumerate": enumerate, "min": min,
+    "max": max, "str": str, "int": int, "float": float, "list": list,
+    "dict": dict, "tuple": tuple, "zip": zip, "sorted": sorted, "sum": sum,
+    "abs": abs, "round": round, "bool": bool, "set": set, "any": any,
+    "all": all, "reversed": reversed, "isinstance": isinstance,
+    "print": lambda *a, **k: None,
+}
+
+_FORBIDDEN_NODES = (ast.Import, ast.ImportFrom, ast.Global, ast.Nonlocal)
+_FORBIDDEN_NAMES = {"__import__", "open", "exec", "eval", "compile",
+                    "globals", "locals", "vars", "getattr", "setattr",
+                    "delattr", "input", "breakpoint", "__builtins__"}
+
+MAX_JOBS = 512
+
+
+def _validate_ast(code: str) -> None:
+    try:
+        tree = ast.parse(code)
+    except SyntaxError as e:
+        raise SandboxError(f"decompose code does not parse: {e}") from e
+    for node in ast.walk(tree):
+        if isinstance(node, _FORBIDDEN_NODES):
+            raise SandboxError(
+                f"forbidden construct {type(node).__name__} in decompose code")
+        if isinstance(node, ast.Name) and node.id in _FORBIDDEN_NAMES:
+            raise SandboxError(f"forbidden name {node.id!r} in decompose code")
+        if isinstance(node, ast.Attribute) and node.attr.startswith("__"):
+            raise SandboxError(f"forbidden dunder access {node.attr!r}")
+
+
+def run_decompose_code(code: str, context: str,
+                       last_jobs: Optional[List[JobManifest]] = None,
+                       max_jobs: int = MAX_JOBS) -> List[JobManifest]:
+    """Execute remote-generated code and return its job manifests."""
+    _validate_ast(code)
+    namespace = {"__builtins__": _SAFE_BUILTINS,
+                 "JobManifest": JobManifest,
+                 **CHUNKING_FUNCTIONS}
+    try:
+        exec(compile(code, "<remote-decompose>", "exec"), namespace)  # noqa: S102
+    except Exception as e:  # noqa: BLE001 — remote code is untrusted input
+        raise SandboxError(f"decompose code raised at def-time: {e}") from e
+
+    fn = namespace.get("prepare_jobs")
+    if fn is None:
+        fns = [v for k, v in namespace.items()
+               if callable(v) and k not in CHUNKING_FUNCTIONS
+               and k != "JobManifest" and not k.startswith("__")]
+        if not fns:
+            raise SandboxError("decompose code defines no function")
+        fn = fns[0]
+    try:
+        jobs = fn(context, last_jobs)
+    except TypeError:
+        jobs = fn(context)
+    except Exception as e:  # noqa: BLE001
+        raise SandboxError(f"decompose function raised: {e}") from e
+
+    if not isinstance(jobs, list):
+        raise SandboxError(f"decompose returned {type(jobs).__name__}, "
+                           "expected list[JobManifest]")
+    out: List[JobManifest] = []
+    for j in jobs[:max_jobs]:
+        if isinstance(j, JobManifest):
+            out.append(j)
+        elif isinstance(j, dict):
+            out.append(JobManifest(**{k: j.get(k, "") for k in
+                                      ("chunk_id", "task_id", "chunk",
+                                       "task", "advice")}))
+        else:
+            raise SandboxError(f"bad job element {type(j).__name__}")
+    if not out:
+        raise SandboxError("decompose produced zero jobs")
+    return out

@@ -1,0 +1,490 @@
+"""Calibrated simulated LMs.
+
+GPT-4o / Llama-3.x checkpoints are unavailable offline, so protocol-level
+quality numbers are reproduced with (a) real tiny JAX models (see
+examples/train_local_lm.py) and (b) the simulators here, whose failure
+modes are calibrated to the paper's own micro-measurements:
+
+  * Table 4 — accuracy vs. context length (512 tokens → 65k: 0.594 → 0.461)
+  * Table 5 — accuracy vs. #sub-tasks      (1 → 4 steps: 0.703 → 0.148)
+
+The simulated LocalLM degrades with context length and instruction
+multi-step-ness exactly along those (normalised) curves; the scripted
+RemoteLM is a competent frontier stand-in that writes real decomposition
+code (executed by the sandbox), votes over worker outputs preferring cited
+answers, and does arithmetic almost perfectly.  Everything flows through
+prompt/response *strings*, so token metering is identical to a real
+deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import random
+import re
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.tokenizer import approx_tokens
+
+from .tasks import METRICS
+
+# --------------------------------------------------------------------------
+# calibration curves (paper Tables 4 & 5, normalised to the 1-chunk /
+# 1-step operating point)
+# --------------------------------------------------------------------------
+
+# (context tokens, relative accuracy)
+CTX_CURVE = [
+    (512, 1.000),       # 1 chunk
+    (8_192, 0.908),     # 16 chunks
+    (16_384, 0.842),    # 32
+    (32_768, 0.815),    # 64
+    (65_536, 0.776),    # 128
+]
+
+# sub-tasks per instruction -> relative accuracy
+STEPS_CURVE = {1: 1.000, 2: 0.567, 3: 0.278, 4: 0.211}
+
+
+def context_factor(n_tokens: int) -> float:
+    if n_tokens <= CTX_CURVE[0][0]:
+        return CTX_CURVE[0][1]
+    if n_tokens >= CTX_CURVE[-1][0]:
+        # extrapolate gently below the last measured point
+        extra = math.log2(n_tokens / CTX_CURVE[-1][0])
+        return max(0.25, CTX_CURVE[-1][1] - 0.05 * extra)
+    for (x0, y0), (x1, y1) in zip(CTX_CURVE, CTX_CURVE[1:]):
+        if x0 <= n_tokens <= x1:
+            t = (math.log(n_tokens) - math.log(x0)) / (math.log(x1)
+                                                       - math.log(x0))
+            return y0 + t * (y1 - y0)
+    return CTX_CURVE[-1][1]
+
+
+def steps_factor(n_steps: int) -> float:
+    n = max(1, min(n_steps, 4))
+    f = STEPS_CURVE[n]
+    if n_steps > 4:
+        f *= 0.75 ** (n_steps - 4)
+    return f
+
+
+# --------------------------------------------------------------------------
+# shared text parsing
+# --------------------------------------------------------------------------
+
+_METRIC_ALT = "|".join(re.escape(m) for m in METRICS)
+FACT_RE = re.compile(
+    rf"[Tt]he ({_METRIC_ALT}) for fiscal year (\d{{4}}) was "
+    rf"\$([\d,]+(?:\.\d+)?) million")
+ASK_RE = re.compile(
+    rf"value of the ({_METRIC_ALT}) for fiscal year (\d{{4}})")
+
+FactKey = Tuple[str, int]
+
+
+def find_facts(text: str) -> Dict[FactKey, float]:
+    out: Dict[FactKey, float] = {}
+    for m, y, v in FACT_RE.findall(text):
+        out[(m, int(y))] = float(v.replace(",", ""))
+    return out
+
+
+def parse_query(query: str) -> Tuple[str, List[FactKey]]:
+    """-> (op, needed facts); op in {extract, ratio, sum}."""
+    m = re.search(rf"What was the ({_METRIC_ALT}) for FY(\d{{4}})", query)
+    if m:
+        return "extract", [(m.group(1), int(m.group(2)))]
+    m = re.search(rf"ratio of ({_METRIC_ALT}) to ({_METRIC_ALT}) "
+                  rf"for FY(\d{{4}})", query)
+    if m:
+        y = int(m.group(3))
+        return "ratio", [(m.group(1), y), (m.group(2), y)]
+    m = re.search(r"sum of (.+) for FY(\d{4})", query)
+    if m:
+        y = int(m.group(2))
+        metrics = [s.strip() for s in m.group(1).split(",")]
+        keys = [(mm, y) for mm in metrics if mm in METRICS]
+        if keys:
+            return "sum", keys
+    return "unknown", []
+
+
+def compute_final(op: str, needed: Sequence[FactKey],
+                  found: Dict[FactKey, float]) -> Optional[str]:
+    if any(k not in found for k in needed):
+        return None
+    vals = [found[k] for k in needed]
+    if op == "extract":
+        return f"{vals[0]:.1f}"
+    if op == "ratio":
+        return f"{vals[0] / vals[1]:.3f}" if vals[1] else None
+    if op == "sum":
+        return f"{sum(vals):.1f}"
+    return None
+
+
+def _rng_for(seed: int, text: str) -> random.Random:
+    return random.Random((seed << 32) ^ zlib.crc32(text.encode()))
+
+
+# --------------------------------------------------------------------------
+# simulated local model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimProfile:
+    name: str
+    skill: float            # P(correct single-step extraction, short chunk)
+    abstain_quality: float  # P(abstain | fact absent from chunk)
+    arith: float            # P(correct arithmetic when all facts in hand)
+
+
+PROFILES: Dict[str, SimProfile] = {
+    "llama-8b": SimProfile("llama-8b", 0.93, 0.95, 0.65),
+    "llama-3b": SimProfile("llama-3b", 0.82, 0.86, 0.45),
+    "qwen-3b": SimProfile("qwen-3b", 0.80, 0.82, 0.50),
+    "llama-1b": SimProfile("llama-1b", 0.45, 0.55, 0.15),
+}
+
+
+class SimulatedLocal:
+    """Plays the LocalLM: worker jobs, Minion chat turns, local-only."""
+
+    def __init__(self, profile: SimProfile | str, seed: int = 0):
+        self.profile = (PROFILES[profile] if isinstance(profile, str)
+                        else profile)
+        self.name = f"sim:{self.profile.name}"
+        self.seed = seed
+
+    # -- public client interface ---------------------------------------
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 512) -> str:
+        if "## Task" in prompt and "## Document" in prompt:
+            return self._worker(prompt)
+        if "### Message from the expert" in prompt:
+            return self._minion_turn(prompt)
+        if "### Document" in prompt and "### Query" in prompt:
+            return self._direct(prompt)
+        return "I am a small model and I do not understand this request."
+
+    def complete_batch(self, prompts: Sequence[str], **kw) -> List[str]:
+        return [self.complete(p, **kw) for p in prompts]
+
+    # -- internals -------------------------------------------------------
+    def _success(self, rng, chunk_tokens: int, n_steps: int) -> bool:
+        p = self.profile.skill * context_factor(chunk_tokens) \
+            * steps_factor(n_steps)
+        return rng.random() < p
+
+    def _worker(self, prompt: str) -> str:
+        chunk = _between(prompt, "## Document", "## Task")
+        task = _between(prompt, "## Task", "Return your result") or ""
+        rng = _rng_for(self.seed, prompt)
+        asked = ASK_RE.findall(task)
+        keys = [(m, int(y)) for m, y in asked] or _fallback_keys(task)
+        present = find_facts(chunk)
+        n_steps = max(1, len(keys))
+        answers, citations = [], []
+        found_any = False
+        for key in keys:
+            if key in present:
+                if self._success(rng, approx_tokens(chunk), n_steps):
+                    answers.append(f"{key[0]} FY{key[1]}: "
+                                   f"{present[key]:.1f}")
+                    citations.append(
+                        f"The {key[0]} for fiscal year {key[1]} was "
+                        f"${present[key]:,.1f} million.")
+                    found_any = True
+                elif rng.random() < 1 - self.profile.abstain_quality:
+                    # failure mode A: hallucinate a wrong value
+                    answers.append(f"{key[0]} FY{key[1]}: "
+                                   f"{rng.uniform(10, 9000):.1f}")
+                    if rng.random() < 0.2:
+                        citations.append("(paraphrased from the document)")
+                    found_any = True
+                # failure mode B: silently miss -> abstain for this key
+            else:
+                if rng.random() >= self.profile.abstain_quality:
+                    answers.append(f"{key[0]} FY{key[1]}: "
+                                   f"{rng.uniform(10, 9000):.1f}")
+                    if rng.random() < 0.2:
+                        citations.append("(paraphrased from the document)")
+                    found_any = True
+        if not found_any or not answers:
+            return json.dumps({"explanation": "Not found in this chunk.",
+                               "citation": None, "answer": None})
+        return json.dumps({
+            "explanation": "Located the requested figure(s) in the chunk.",
+            "citation": " ".join(citations) if citations else None,
+            "answer": "; ".join(answers)})
+
+    def _minion_turn(self, prompt: str) -> str:
+        doc = _between(prompt, "### Document", "### Query") or ""
+        msg = prompt.split("### Message from the expert", 1)[-1]
+        rng = _rng_for(self.seed, prompt)
+        keys = [(m, int(y)) for m, y in ASK_RE.findall(msg)]
+        present = find_facts(doc)
+        n_steps = max(1, len(keys))
+        lines = []
+        for key in keys:
+            if key in present and self._success(
+                    rng, approx_tokens(doc), n_steps):
+                lines.append(f"The {key[0]} for fiscal year {key[1]} was "
+                             f"${present[key]:,.1f} million.")
+            elif key in present \
+                    and rng.random() < 1 - self.profile.abstain_quality:
+                lines.append(f"The {key[0]} for fiscal year {key[1]} was "
+                             f"${rng.uniform(10, 9000):,.1f} million.")
+            else:
+                lines.append(f"I could not find the {key[0]} for "
+                             f"{key[1]} in the document.")
+        if not keys:
+            lines.append("Could you specify which metric and year you need?")
+        return "\n".join(lines)
+
+    def _direct(self, prompt: str) -> str:
+        doc = _between(prompt, "### Document", "### Query") or ""
+        query = prompt.split("### Query", 1)[-1]
+        rng = _rng_for(self.seed, prompt)
+        op, needed = parse_query(query)
+        present = find_facts(doc)
+        n_steps = max(1, len(needed))
+        found: Dict[FactKey, float] = {}
+        for key in needed:
+            if key in present and self._success(
+                    rng, approx_tokens(doc), n_steps):
+                found[key] = present[key]
+        ans = compute_final(op, needed, found)
+        if ans is None or (op != "extract"
+                           and rng.random() > self.profile.arith):
+            return f"The answer is {rng.uniform(0.01, 5000):.3f}."
+        return f"The answer is {ans}."
+
+
+def _between(text: str, a: str, b: str) -> Optional[str]:
+    if a not in text:
+        return None
+    seg = text.split(a, 1)[1]
+    return seg.split(b, 1)[0] if b in seg else seg
+
+
+def _fallback_keys(task: str) -> List[FactKey]:
+    keys = []
+    for m in METRICS:
+        if m in task:
+            for y in re.findall(r"(\d{4})", task):
+                keys.append((m, int(y)))
+    return keys[:4]
+
+
+# --------------------------------------------------------------------------
+# scripted remote model (frontier stand-in)
+# --------------------------------------------------------------------------
+
+
+class ScriptedRemote:
+    """Stands in for GPT-4o: decomposes by *writing Python code*, votes over
+    worker outputs (preferring cited answers), performs near-perfect
+    arithmetic, and chats in the Minion protocol."""
+
+    def __init__(self, seed: int = 0, skill: float = 0.97,
+                 arith: float = 0.97):
+        self.name = "scripted:gpt-4o"
+        self.seed = seed
+        self.skill = skill
+        self.arith = arith
+
+    # -- client interface -------------------------------------------------
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 1024) -> str:
+        if "# Decomposition Round" in prompt:
+            return self._decompose(prompt)
+        if "## ANSWER GUIDELINES" in prompt:
+            return self._synthesize(prompt)
+        if "### Message from the expert" not in prompt \
+                and "chat with a small" in prompt:
+            return self._minion_init(prompt)
+        if "Here is the response from the small language model" in prompt:
+            return self._minion_continue(prompt)
+        if "### Document" in prompt and "### Query" in prompt:
+            return self._direct(prompt)
+        return json.dumps({"decision": "request_additional_info",
+                           "message": "Please clarify the task."})
+
+    def complete_batch(self, prompts: Sequence[str], **kw) -> List[str]:
+        return [self.complete(p, **kw) for p in prompts]
+
+    # -- decompose: WRITE CODE (paper §5.1 step 1) -----------------------
+    def _decompose(self, prompt: str) -> str:
+        query = (_between(prompt, "### Query", "### Scratchpad") or "").strip()
+        scratch = prompt.split("### Scratchpad", 1)[-1]
+        m = re.search(r"chunks of (\d+) pages", prompt)
+        pages_per_chunk = int(m.group(1)) if m else 5
+        m = re.search(r"at most (\d+) distinct tasks", prompt)
+        num_tasks = int(m.group(1)) if m else 3
+
+        op, needed = parse_query(query)
+        already = set(find_facts(scratch))
+        targets = [k for k in needed if k not in already] or needed[:1]
+        # redundancy: rephrase extra tasks over the same targets (§6.3)
+        task_specs: List[Tuple[int, str]] = []
+        tid = 0
+        while len(task_specs) < max(num_tasks, len(targets)) \
+                and tid < num_tasks * 2:
+            key = targets[tid % len(targets)]
+            phrasing = ("Extract the value of the {m} for fiscal year {y}. "
+                        "Abstain if it is not present in this chunk."
+                        if tid < len(targets) else
+                        "Double-check: find the value of the {m} for fiscal "
+                        "year {y}. Abstain if it is not present.")
+            task_specs.append(
+                (tid, phrasing.format(m=key[0], y=key[1])))
+            tid += 1
+            if len(task_specs) >= num_tasks:
+                break
+        tasks_py = ",\n        ".join(
+            f"({t}, {json.dumps(s)})" for t, s in task_specs)
+        code = f'''\
+Here is the decomposition function:
+
+```python
+def prepare_jobs(context, last_jobs=None):
+    job_manifests = []
+    chunks = chunk_on_multiple_pages(context,
+                                     pages_per_chunk={pages_per_chunk})
+    tasks = [
+        {tasks_py},
+    ]
+    for task_id, task in tasks:
+        for ci, chunk in enumerate(chunks):
+            job_manifests.append(JobManifest(
+                chunk_id=str(ci), task_id=task_id, chunk=chunk,
+                task=task, advice=""))
+    return job_manifests
+```
+'''
+        return code
+
+    # -- synthesize: vote, compute, decide --------------------------------
+    def _synthesize(self, prompt: str) -> str:
+        query = (_between(prompt, "### Query", "### Outputs") or "").strip()
+        outputs = _between(prompt, "### Outputs", "### Scratchpad") or ""
+        scratch = _between(prompt, "### Scratchpad", "## ANSWER GUIDELINES") \
+            or ""
+        force = "FINAL round" in prompt
+        rng = _rng_for(self.seed, prompt)
+
+        op, needed = parse_query(query)
+        found: Dict[FactKey, float] = dict(find_facts(scratch))
+
+        # parse job blocks -> candidate values per fact key
+        candidates: Dict[FactKey, List[Tuple[float, bool]]] = {}
+        for block in re.split(r"\[job \d+ \| task_id \d+\]", outputs)[1:]:
+            task_line = block.split("\n", 1)[0]
+            keys = [(m, int(y)) for m, y in ASK_RE.findall(task_line)] \
+                or [(m, int(y)) for m, y in re.findall(
+                    rf"({_METRIC_ALT}) for fiscal year (\d{{4}})",
+                    task_line)]
+            ans = _between(block, "answer:", "\n") or ""
+            cit = _between(block, "citation:", "\n") or ""
+            has_citation = "fiscal year" in cit
+            for m_, y_, v_ in re.findall(
+                    rf"({_METRIC_ALT}) FY(\d{{4}}): ([\d.]+)", ans):
+                candidates.setdefault((m_, int(y_)), []).append(
+                    (float(v_), has_citation))
+            if not keys:
+                continue
+
+        for key, vals in candidates.items():
+            cited = [v for v, c in vals if c]
+            pool = cited if cited else [v for v, _ in vals]
+            if not pool:
+                continue
+            # majority vote
+            counts: Dict[float, int] = {}
+            for v in pool:
+                counts[v] = counts.get(v, 0) + 1
+            best = max(counts.items(), key=lambda kv: (kv[1], kv[0]))[0]
+            found[key] = best
+
+        missing = [k for k in needed if k not in found]
+        found_lines = "; ".join(
+            f"The {m} for fiscal year {y} was ${v:,.1f} million."
+            for (m, y), v in found.items())
+        if missing and not force:
+            return json.dumps({
+                "decision": "request_additional_info",
+                "explanation": (f"Found so far: {found_lines or 'nothing'}. "
+                                f"Still missing: " + "; ".join(
+                                    f"the {m} for fiscal year {y}"
+                                    for m, y in missing)),
+                "answer": None})
+        ans = compute_final(op, needed, found)
+        if ans is not None and op != "extract" \
+                and rng.random() > self.arith:
+            ans = f"{float(ans) * rng.uniform(0.5, 1.5):.3f}"
+        return json.dumps({
+            "decision": "provide_final_answer",
+            "explanation": f"Based on: {found_lines or 'best effort'}.",
+            "answer": ans if ans is not None
+            else (f"{rng.uniform(0.01, 5000):.3f}")})
+
+    # -- Minion chat -------------------------------------------------------
+    def _minion_init(self, prompt: str) -> str:
+        query = (_between(prompt, "### Query", "### Instructions")
+                 or "").strip()
+        op, needed = parse_query(query)
+        if not needed:
+            return "Please summarize the key figures in the document."
+        asks = " ".join(
+            f"Please report the value of the {m} for fiscal year {y}."
+            for m, y in needed)
+        return asks
+
+    def _minion_continue(self, prompt: str) -> str:
+        query = (_between(prompt, "### Query", "### Conversation")
+                 or "").strip()
+        response = _between(prompt, "### Response", "### Query") or ""
+        history = _between(prompt, "### Conversation so far",
+                           "### Instructions") or ""
+        rng = _rng_for(self.seed, prompt)
+        op, needed = parse_query(query)
+        found = find_facts(history + "\n" + response)
+        missing = [k for k in needed if k not in found]
+        if missing:
+            # After the first exchange the remote has learned the small
+            # model mishandles multi-part instructions (paper §4) and asks
+            # for ONE fact at a time.
+            asks_list = missing[:1] if history.strip() else missing
+            asks = " ".join(
+                f"Please report the value of the {m} for fiscal year {y}."
+                for m, y in asks_list)
+            return json.dumps({"decision": "request_additional_info",
+                               "message": asks})
+        ans = compute_final(op, needed, found)
+        if ans is not None and op != "extract" \
+                and rng.random() > self.arith:
+            ans = f"{float(ans) * rng.uniform(0.5, 1.5):.3f}"
+        return json.dumps({"decision": "provide_final_answer",
+                           "answer": ans or "unknown"})
+
+    # -- remote-only / RAG baseline ----------------------------------------
+    def _direct(self, prompt: str) -> str:
+        doc = _between(prompt, "### Document", "### Query") or ""
+        query = prompt.split("### Query", 1)[-1]
+        rng = _rng_for(self.seed, prompt)
+        op, needed = parse_query(query)
+        present = find_facts(doc)
+        found = {k: present[k] for k in needed
+                 if k in present and rng.random() < self.skill}
+        ans = compute_final(op, needed, found)
+        if ans is None:
+            return f"The answer is approximately " \
+                   f"{rng.uniform(0.01, 5000):.3f}."
+        if op != "extract" and rng.random() > self.arith:
+            ans = f"{float(ans) * rng.uniform(0.5, 1.5):.3f}"
+        return f"The answer is {ans}."

@@ -1,0 +1,178 @@
+"""Synthetic data-intensive reasoning suite.
+
+FinanceBench-style tasks: long multi-page documents stuffed with metric
+facts (plus distractor prose), queries that require extracting one fact or
+combining several (multi-step numerical reasoning), and exact ground-truth
+answers.  Used to evaluate local-only / remote-only / Minion / MinionS —
+the offline stand-in for FinanceBench / LongHealth / QASPER.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Tuple
+
+from .chunking import PAGE_SEP
+
+METRICS = [
+    "total revenue", "net income", "operating income", "gross profit",
+    "depreciation and amortization", "capital expenditure",
+    "research and development expense", "cost of goods sold",
+    "cash and equivalents", "total assets", "accounts receivable",
+    "inventory balance", "long term debt", "interest expense",
+    "marketing expense",
+]
+YEARS = [2012, 2013, 2014, 2015, 2016, 2017]
+COMPANIES = ["AMD", "Cyberdyne", "Initech", "Hooli", "Stark Industries",
+             "Wayne Enterprises", "Acme Corp", "Globex"]
+
+_FILLER = [
+    "The company continued to execute against its strategic roadmap.",
+    "Management believes these results reflect disciplined execution.",
+    "Refer to the notes to the consolidated financial statements.",
+    "Forward-looking statements involve risks and uncertainties.",
+    "The board of directors reviewed the quarterly performance.",
+    "Segment results are presented on an adjusted basis.",
+    "Currency headwinds partially offset organic growth.",
+    "The auditors expressed an unqualified opinion.",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Fact:
+    metric: str
+    year: int
+    value: float
+
+    def sentence(self) -> str:
+        return (f"The {self.metric} for fiscal year {self.year} was "
+                f"${self.value:,.1f} million.")
+
+
+@dataclasses.dataclass
+class Task:
+    context: str
+    query: str
+    answer: str
+    kind: str                    # "extract" | "compute"
+    needed: List[Fact]
+    company: str
+    task_id: int
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.needed)
+
+
+def _fact_value(rng: random.Random) -> float:
+    return round(rng.uniform(10.0, 9000.0), 1)
+
+
+def make_document(rng: random.Random, n_pages: int, company: str,
+                  facts: List[Fact], sentences_per_page: int = 14
+                  ) -> Tuple[str, Dict[Tuple[str, int], int]]:
+    """Scatter fact sentences uniformly across pages of filler prose.
+    Returns (document, fact -> page index)."""
+    pages: List[List[str]] = [[] for _ in range(n_pages)]
+    for p in range(n_pages):
+        pages[p].append(f"{company} Annual Report — page {p + 1}.")
+        for _ in range(sentences_per_page):
+            pages[p].append(rng.choice(_FILLER))
+    placement: Dict[Tuple[str, int], int] = {}
+    for f in facts:
+        p = rng.randrange(n_pages)
+        slot = rng.randrange(1, len(pages[p]))
+        pages[p].insert(slot, f.sentence())
+        placement[(f.metric, f.year)] = p
+    return PAGE_SEP.join(" ".join(p) for p in pages), placement
+
+
+def make_task(seed: int, *, n_pages: int = 40, kind: Optional[str] = None,
+              n_steps: int = 2) -> Task:
+    """One task: a document with every (metric, year) fact instantiated,
+    plus a query over 1 (extract) or n_steps (compute) of them."""
+    rng = random.Random(seed)
+    company = rng.choice(COMPANIES)
+    facts = [Fact(m, y, _fact_value(rng)) for m in METRICS for y in YEARS]
+    context, _ = make_document(rng, n_pages, company, facts)
+    if kind is None:
+        kind = "extract" if rng.random() < 0.5 else "compute"
+
+    if kind == "extract":
+        f = rng.choice(facts)
+        query = (f"What was the {f.metric} for FY{f.year} "
+                 f"(in millions of USD)?")
+        return Task(context, query, f"{f.value:.1f}", "extract", [f],
+                    company, seed)
+
+    # compute: ratio of n_steps facts for one year
+    year = rng.choice(YEARS)
+    metrics = rng.sample(METRICS, n_steps)
+    chosen = [next(f for f in facts if f.metric == m and f.year == year)
+              for m in metrics]
+    if n_steps == 2:
+        a, b = chosen
+        query = (f"Compute the ratio of {a.metric} to {b.metric} for "
+                 f"FY{year} (round to 3 decimals).")
+        answer = f"{a.value / b.value:.3f}"
+    else:
+        query = (f"Compute the sum of "
+                 f"{', '.join(m for m in metrics)} for FY{year} "
+                 f"(in millions, 1 decimal).")
+        answer = f"{sum(f.value for f in chosen):.1f}"
+    return Task(context, query, answer, "compute", chosen, company, seed)
+
+
+def make_dataset(n_tasks: int, *, seed: int = 0, n_pages: int = 40,
+                 compute_frac: float = 0.5, n_steps: int = 2) -> List[Task]:
+    rng = random.Random(seed)
+    tasks = []
+    for i in range(n_tasks):
+        kind = "compute" if rng.random() < compute_frac else "extract"
+        tasks.append(make_task(seed * 10_000 + i, n_pages=n_pages, kind=kind,
+                               n_steps=n_steps))
+    return tasks
+
+
+# --------------------------------------------------------------------------
+# scoring
+# --------------------------------------------------------------------------
+
+
+def _numbers_in(text: str) -> List[float]:
+    out, cur = [], ""
+    for ch in text:
+        if ch.isdigit() or (ch == "." and cur and "." not in cur) \
+                or (ch == "-" and not cur):
+            cur += ch
+        elif ch == "," and cur:
+            continue
+        else:
+            if cur and any(c.isdigit() for c in cur):
+                try:
+                    out.append(float(cur))
+                except ValueError:
+                    pass
+            cur = ""
+    if cur and any(c.isdigit() for c in cur):
+        try:
+            out.append(float(cur))
+        except ValueError:
+            pass
+    return out
+
+
+def score_answer(predicted: Optional[str], expected: str,
+                 rel_tol: float = 5e-3) -> bool:
+    """Binary correctness: the expected number appears (within tolerance)
+    in the predicted answer."""
+    if not predicted:
+        return False
+    try:
+        target = float(expected.replace(",", ""))
+    except ValueError:
+        return expected.strip().lower() in predicted.strip().lower()
+    for n in _numbers_in(predicted):
+        if abs(n - target) <= max(abs(target) * rel_tol, 5e-4):
+            return True
+    return False

@@ -1,0 +1,136 @@
+"""Core protocol datatypes (the paper's JobManifest / JobOutput contract)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class JobManifest:
+    """A single-step subtask over a chunk of context (paper §5.1 Step 1)."""
+    chunk_id: str
+    task_id: int
+    chunk: str
+    task: str
+    advice: str = ""
+
+    def to_prompt_context(self) -> str:
+        return self.chunk
+
+
+@dataclasses.dataclass
+class JobOutput:
+    """Worker result: explanation / citation / answer, abstain = answer None
+    (paper §5.1 Step 2)."""
+    explanation: str = ""
+    citation: Optional[str] = None
+    answer: Optional[str] = None
+    job: Optional[JobManifest] = None
+    sample_index: int = 0
+
+    @property
+    def abstained(self) -> bool:
+        return self.answer is None or str(self.answer).strip().lower() in (
+            "", "none", "null", "n/a")
+
+    @classmethod
+    def from_json_text(cls, text: str, job: Optional[JobManifest] = None,
+                       sample_index: int = 0) -> "JobOutput":
+        data = extract_json(text) or {}
+        ans = data.get("answer")
+        if isinstance(ans, (int, float)):
+            ans = str(ans)
+        return cls(explanation=str(data.get("explanation", ""))[:500],
+                   citation=(None if data.get("citation") in (None, "None")
+                             else str(data.get("citation"))[:500]),
+                   answer=None if ans in (None, "None") else str(ans),
+                   job=job, sample_index=sample_index)
+
+
+@dataclasses.dataclass
+class Usage:
+    """Remote-model token usage (the costed quantity, §3)."""
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+    def add(self, prefill: int = 0, decode: int = 0) -> None:
+        self.prefill_tokens += prefill
+        self.decode_tokens += decode
+
+    def __iadd__(self, other: "Usage") -> "Usage":
+        self.prefill_tokens += other.prefill_tokens
+        self.decode_tokens += other.decode_tokens
+        return self
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_index: int
+    num_jobs: int = 0
+    num_kept: int = 0
+    remote_usage: Usage = dataclasses.field(default_factory=Usage)
+    local_prefill_tokens: int = 0
+    local_decode_tokens: int = 0
+    decision: str = ""
+
+
+@dataclasses.dataclass
+class ProtocolResult:
+    answer: Optional[str]
+    remote_usage: Usage
+    local_prefill_tokens: int = 0
+    local_decode_tokens: int = 0
+    rounds: List[RoundRecord] = dataclasses.field(default_factory=list)
+    transcript: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+
+# --------------------------------------------------------------------------
+# tolerant JSON extraction (remote/local models wrap JSON in prose/fences)
+# --------------------------------------------------------------------------
+
+
+def extract_json(text: str) -> Optional[Dict[str, Any]]:
+    if not text:
+        return None
+    candidates = []
+    if "```" in text:
+        parts = text.split("```")
+        for i in range(1, len(parts), 2):
+            block = parts[i]
+            if block.startswith("json"):
+                block = block[4:]
+            candidates.append(block)
+    # fall back to outermost brace span
+    start, end = text.find("{"), text.rfind("}")
+    if 0 <= start < end:
+        candidates.append(text[start:end + 1])
+    for cand in candidates:
+        try:
+            obj = json.loads(cand)
+            if isinstance(obj, dict):
+                return obj
+        except (json.JSONDecodeError, ValueError):
+            continue
+    return None
+
+
+def extract_code(text: str) -> Optional[str]:
+    """Pull a python code block out of a remote decompose response."""
+    if not text:
+        return None
+    if "```" in text:
+        parts = text.split("```")
+        for i in range(1, len(parts), 2):
+            block = parts[i]
+            if block.startswith("python"):
+                block = block[6:]
+            if "def " in block or "JobManifest(" in block:
+                return block
+    if "def " in text:
+        return text
+    return None

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the MinionS local execute-step hot paths.
+
+chunked_prefill — block-diagonal flash attention over concatenated job
+chunks (the parallel-jobs prefill); gqa_decode — grouped single-token
+decode attention vs. a KV cache.  Both validated against the pure-jnp
+oracles in ref.py (interpret=True on CPU).
+"""
+from .ops import chunked_prefill, gqa_decode
+
+__all__ = ["chunked_prefill", "gqa_decode"]

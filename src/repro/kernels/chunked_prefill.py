@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: block-diagonal (chunked) flash-attention prefill.
+
+This is the MinionS local execute-step hot path: all parallel jobs'
+chunks are concatenated into one sequence per batch row with
+``segment_ids`` marking chunk membership, and ONE fused kernel runs
+flash attention with a causal ∧ same-segment mask.
+
+TPU-native adaptation (DESIGN.md §3): rather than launching one small
+attention per chunk (which starves the MXU), the kernel tiles the whole
+concatenated sequence through VMEM and *skips* KV tiles that cannot
+intersect the query tile — either because they are entirely in the causal
+future, or because their segment range does not overlap the query tile's
+segment range.  The skip realises the paper's `2n²d/c` attention-FLOP
+saving (App. C.2.3) structurally on the systolic array.
+
+Grid: (batch, heads, num_q_blocks, num_kv_blocks); the kv dimension is
+innermost/"arbitrary" so VMEM scratch carries the online-softmax state
+(acc, m, l) across kv iterations.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, out_ref,
+            acc_ref, m_ref, l_ref, *, block_q: int, block_k: int,
+            sm_scale: float, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seg_q = segq_ref[0, :]                       # (block_q,)
+    seg_k = segk_ref[0, :]                       # (block_k,)
+
+    # --- tile-level skip: causal future or disjoint segment ranges --------
+    q_start = qi * block_q
+    k_start = kj * block_k
+    causal_live = k_start <= q_start + block_q - 1
+    seg_live = jnp.logical_and(jnp.max(seg_k) >= jnp.min(seg_q),
+                               jnp.min(seg_k) <= jnp.max(seg_q))
+    live = jnp.logical_and(causal_live, seg_live)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale   # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = (kpos <= qpos) & (seg_q[:, None] == seg_k[None, :])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        out_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def chunked_prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              segment_ids: jnp.ndarray, *,
+                              block_q: int = 128, block_k: int = 128,
+                              interpret: bool = True) -> jnp.ndarray:
+    """q,k,v: (B, S, H, hd) with kv already head-repeated; segment_ids (B,S).
+
+    S must be a multiple of the block sizes (ops.py pads).  hd should be a
+    multiple of 128 for MXU alignment on real hardware; interpret mode
+    accepts anything.
+    """
+    b, s, h, hd = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               sm_scale=sm_scale, num_kv_blocks=nk)
+
+    seg_spec = lambda blk, is_q: pl.BlockSpec(
+        (1, blk), lambda bb, hh, qi, kj: (bb, qi if is_q else kj))
+
+    compiler_params = None
+    cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cp_cls is not None:
+        compiler_params = cp_cls(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bb, hh, qi, kj: (bb, qi, hh, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, hh, qi, kj: (bb, kj, hh, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, hh, qi, kj: (bb, kj, hh, 0)),
+            seg_spec(block_q, True),
+            seg_spec(block_k, False),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bb, hh, qi, kj: (bb, qi, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(q, k, v, segment_ids, segment_ids)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: single-token GQA decode attention vs. a KV cache.
+
+The MinionS decode hot path: many parallel local jobs each decode one token
+per step against their own chunk's KV cache.  Grouped-query heads are
+processed together so the MXU sees a (q_per_kv × block_k) matmul per tile
+instead of q_per_kv separate vector dots, and the KV cache is streamed
+HBM→VMEM once per kv head (not once per q head — no materialised
+``repeat_kv``).
+
+Grid: (batch, kv_heads, kv_blocks); kv innermost with VMEM online-softmax
+scratch.  ``valid_len`` (B,) masks unwritten ring-buffer slots and is
+delivered via scalar prefetch so fully-dead KV tiles are skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref, out_ref,
+            acc_ref, m_ref, l_ref, *, block_k: int, sm_scale: float,
+            num_kv_blocks: int, group: int):
+    bb = pl.program_id(0)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[bb]
+    live = kj * block_k < valid
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * sm_scale  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bk)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_k), 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        out_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, valid_len: jnp.ndarray, *,
+                         block_k: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, hd); caches: (B, L, Hkv, hd); valid_len: (B,) int32.
+
+    Returns (B, H, hd).  L must be a multiple of block_k (ops.py pads).
+    """
+    b, h, hd = q.shape
+    _, l, hkv, _ = k_cache.shape
+    assert h % hkv == 0
+    group = h // hkv
+    assert l % block_k == 0, (l, block_k)
+    nk = l // block_k
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    # (B, H, hd) -> (B, Hkv, G, hd) so one grid step owns a whole q group
+    qg = q.reshape(b, hkv, group, hd)
+
+    kernel = functools.partial(_kernel, block_k=block_k, sm_scale=sm_scale,
+                               num_kv_blocks=nk, group=group)
+
+    compiler_params = None
+    cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cp_cls is not None:
+        compiler_params = cp_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda bb, kh, kj, valid: (bb, kh, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, kh, kj, valid: (bb, kj, kh, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, kh, kj, valid: (bb, kj, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda bb, kh, kj, valid: (bb, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(valid_len, qg, k_cache, v_cache)
+    return out.reshape(b, h, hd)

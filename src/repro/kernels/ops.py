@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, head repetition policy, and the
+interpret-mode switch (interpret=True on CPU — the kernel body runs in
+Python for correctness validation; on TPU backends interpret=False compiles
+to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .chunked_prefill import chunked_prefill_attention
+from .gqa_decode import gqa_decode_attention
+
+PAD_SEGMENT = -1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chunked_prefill(q, k, v, segment_ids, *, block_q: int = 128,
+                    block_k: int = 128, interpret=None):
+    """Block-diagonal causal flash attention (B,S,H,hd)x(B,S) -> (B,S,H,hd).
+
+    kv may have fewer heads (GQA) — repeated here.  Sequence padded to the
+    block size with segment id -1 (matches nothing real).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, hd = q.shape
+    if k.shape[2] != h:
+        rep = h // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    blk = max(block_q, block_k)
+    pad = (-s) % blk
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        segment_ids = jnp.pad(segment_ids, ((0, 0), (0, pad)),
+                              constant_values=PAD_SEGMENT)
+    out = chunked_prefill_attention(q, k, v, segment_ids, block_q=block_q,
+                                    block_k=block_k, interpret=interpret)
+    return out[:, :s]
+
+
+def gqa_decode(q, k_cache, v_cache, valid_len, *, block_k: int = 256,
+               interpret=None):
+    """GQA decode attention.  q: (B,H,hd) or (B,1,H,hd); caches
+    (B,L,Hkv,hd) NOT head-repeated; valid_len scalar or (B,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    squeeze = False
+    if q.ndim == 4:
+        q = q[:, 0]
+        squeeze = True
+    b, h, hd = q.shape
+    l = k_cache.shape[1]
+    valid_len = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    pad = (-l) % block_k
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, zpad)
+        v_cache = jnp.pad(v_cache, zpad)
+    out = gqa_decode_attention(q, k_cache, v_cache, valid_len,
+                               block_k=block_k, interpret=interpret)
+    return out[:, None] if squeeze else out

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """Block-diagonal causal attention over concatenated job chunks.
+
+    q,k,v: (B, S, H, hd); segment_ids: (B, S) int32 — tokens only attend to
+    earlier tokens *within the same segment* (MinionS jobs never attend
+    across chunk boundaries).
+    """
+    b, s, h, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    causal = kpos <= qpos
+    seg = segment_ids[:, None, :, None] == segment_ids[:, None, None, :]
+    mask = causal[None, None] & seg
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                   valid_len: jnp.ndarray) -> jnp.ndarray:
+    """Single-token GQA decode attention against a (ring-buffer) cache.
+
+    q: (B, H, hd); caches: (B, L, Hkv, hd); valid_len: (B,) int32 count of
+    valid slots (ring buffers make ordering irrelevant).  Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    _, l, hkv, _ = k_cache.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, kc) / math.sqrt(hd)
+    mask = jnp.arange(l)[None, :] < valid_len[:, None]          # (B, L)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", probs, vc)
+    return out.reshape(b, h, hd).astype(q.dtype)

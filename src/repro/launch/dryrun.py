@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) combination
+on the production meshes, print memory/cost analysis, dump roofline JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import flops as FL  # noqa: E402
+from repro.analysis import roofline as RL  # noqa: E402
+from repro.configs import get_config, list_archs, long_context_variant  # noqa: E402
+from repro.configs.registry import batch_struct, decode_batch_struct  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.config import INPUT_SHAPES, get_input_shape  # noqa: E402
+from repro.parallel import (batch_specs, cache_specs, opt_state_specs,  # noqa: E402
+                            param_specs, to_shardings)
+from repro.training import AdamWConfig  # noqa: E402
+from repro.training.train_loop import init_state, make_train_step  # noqa: E402
+
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    if shape.mode == "train":
+        return batch_struct(cfg, shape, for_train=True)
+    if shape.mode == "prefill":
+        return batch_struct(cfg, shape, for_train=False)
+    return decode_batch_struct(cfg, shape)
+
+
+def _dryrun_config(arch: str, shape):
+    # bf16 weights/activations; scan-over-layers keeps HLO size O(1) in depth
+    cfg = get_config(arch).replace(dtype="bfloat16", scan_layers=True)
+    if shape.mode == "train":
+        cfg = cfg.replace(remat=True)
+    if shape.name == "long_500k":
+        cfg = long_context_variant(cfg)
+    return cfg
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                cfg_override=None, verbose: bool = True,
+                grouped_decode: bool = False, int8_kv: bool = False,
+                zero1: bool = False, microbatch: int = 0,
+                pure_dp: bool = False):
+    """Lower + compile one (arch, shape, mesh). Returns result dict."""
+    shape = get_input_shape(shape_name)
+    cfg = cfg_override or _dryrun_config(arch, shape)
+    if grouped_decode:
+        cfg = cfg.replace(grouped_decode=True)
+    if int8_kv:
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            opt = AdamWConfig(microbatch=microbatch)
+            step = make_train_step(cfg, opt)
+            state_struct = jax.eval_shape(
+                lambda: init_state(cfg, jax.random.PRNGKey(0)))
+            from repro.training.train_loop import TrainState
+            state_spec_tree = TrainState(
+                param_specs(mesh, state_struct.params, cfg,
+                            pure_dp=pure_dp),
+                opt_state_specs(mesh, state_struct.params, cfg,
+                                zero1=zero1, pure_dp=pure_dp))
+            state_shardings = to_shardings(mesh, state_spec_tree)
+            batch = input_specs(cfg, shape)
+            bshard = to_shardings(mesh, batch_specs(mesh, cfg, batch,
+                                                    pure_dp=pure_dp))
+            metric_shardings = {
+                k: jax.sharding.NamedSharding(mesh,
+                                              jax.sharding.PartitionSpec())
+                for k in ("loss", "ce", "router_aux", "grad_norm", "lr")}
+            lowered = jax.jit(
+                step, in_shardings=(state_shardings, bshard),
+                out_shardings=(state_shardings, metric_shardings),
+                donate_argnums=0).lower(state_struct, batch)
+        elif shape.mode == "prefill":
+            params_struct = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+            pshard = to_shardings(mesh, param_specs(mesh, params_struct, cfg))
+            batch = input_specs(cfg, shape)
+            bshard = to_shardings(mesh, batch_specs(mesh, cfg, batch))
+            cache_struct = jax.eval_shape(
+                lambda: T.init_cache(cfg, shape.global_batch,
+                                     shape.seq_len))
+            cshard = to_shardings(mesh, cache_specs(mesh, cfg, cache_struct))
+            logit_shard = jax.sharding.NamedSharding(
+                mesh, batch_specs(mesh, cfg, {
+                    "x": jax.ShapeDtypeStruct(
+                        (shape.global_batch, 1, cfg.vocab_size),
+                        jnp.float32)})["x"])
+            fn = partial(_prefill_step, cfg=cfg, capacity=shape.seq_len)
+            lowered = jax.jit(fn, in_shardings=(pshard, bshard),
+                              out_shardings=(logit_shard, cshard),
+                              ).lower(params_struct, batch)
+        else:  # decode
+            params_struct = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+            pshard = to_shardings(
+                mesh, param_specs(mesh, params_struct, cfg, decode=True))
+            cache_struct = jax.eval_shape(
+                lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+            cshard = to_shardings(mesh, cache_specs(mesh, cfg, cache_struct))
+            token = input_specs(cfg, shape)["token"]
+            tshard = to_shardings(
+                mesh, batch_specs(mesh, cfg, {"token": token}))["token"]
+            logit_shard = jax.sharding.NamedSharding(
+                mesh, batch_specs(mesh, cfg, {
+                    "x": jax.ShapeDtypeStruct(
+                        (shape.global_batch, 1, cfg.vocab_size),
+                        jnp.float32)})["x"])
+            fn = partial(_serve_step, cfg=cfg)
+            # steady-state decode: output cache sharding == input (the
+            # serve loop feeds it straight back)
+            lowered = jax.jit(fn, in_shardings=(pshard, tshard, cshard),
+                              out_shardings=(logit_shard, cshard),
+                              donate_argnums=2,
+                              ).lower(params_struct, token, cache_struct)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    est = FL.estimate(cfg, shape)
+    rl = RL.analyze(compiled, hlo, analytic=est, chips=n_chips)
+    n_tok = shape.global_batch * (shape.seq_len if shape.mode == "train"
+                                  else (shape.seq_len
+                                        if shape.mode == "prefill" else 1))
+    mf = RL.model_flops(cfg, n_tok, train=shape.mode == "train") / n_chips
+
+    result = {
+        "arch": arch, "shape": shape.name, "mode": shape.mode,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "config_name": cfg.name,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "opts": {"grouped_decode": grouped_decode, "int8_kv": int8_kv,
+                 "zero1": zero1, "microbatch": microbatch,
+                 "pure_dp": pure_dp},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        "roofline": rl.as_dict(),
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": (mf / rl.flops) if rl.flops else None,
+    }
+    if verbose:
+        print(f"== {arch} × {shape.name} × {result['mesh']} "
+              f"({shape.mode}) ==")
+        print(f"  memory_analysis: args="
+              f"{result['memory']['argument_bytes']/2**30:.2f}GiB "
+              f"temp={result['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"out={result['memory']['output_bytes']/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops/chip={rl.flops:.3e} "
+              f"bytes/chip={rl.bytes_accessed:.3e}")
+        print(f"  roofline: compute={rl.compute_s*1e3:.3f}ms "
+              f"memory={rl.memory_s*1e3:.3f}ms "
+              f"collective={rl.collective_s*1e3:.3f}ms "
+              f"-> {rl.bottleneck}-bound")
+        print(f"  collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in rl.coll_by_kind.items() if v} }")
+        print(f"  model_flops/hlo_flops = "
+              f"{result['useful_flops_ratio'] and round(result['useful_flops_ratio'], 3)}")
+    return result
+
+
+def _prefill_step(params, batch, *, cfg, capacity):
+    return T.prefill(params, cfg, batch, capacity=capacity)
+
+
+def _serve_step(params, token, cache, *, cfg):
+    return T.decode_step(params, cfg, token, cache)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--grouped-decode", action="store_true")
+    ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--pure-dp", action="store_true")
+    args = ap.parse_args()
+
+    combos = []
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else [s.name for s in INPUT_SHAPES]
+    meshes = [False, True] if args.all else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape, mp in combos:
+        tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"-- {tag}: cached")
+            continue
+        try:
+            res = lower_combo(arch, shape, multi_pod=mp,
+                              grouped_decode=args.grouped_decode,
+                              int8_kv=args.int8_kv, zero1=args.zero1,
+                              microbatch=args.microbatch,
+                              pure_dp=args.pure_dp)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((tag, str(e)))
+    if failures:
+        print("FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(combos)} combos")
+
+
+if __name__ == "__main__":
+    main()

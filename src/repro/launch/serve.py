@@ -1,0 +1,54 @@
+"""Serving launcher: batched generation with the inference engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        [--checkpoint out/ckpt.npz] --prompts "hello" "world"
+
+This is the LocalLM side of the MinionS deployment; the protocol drivers in
+examples/ compose it with a remote client.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import transformer as T
+from repro.serving import InferenceEngine
+from repro.training import load
+
+
+def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
+                 max_seq_len: int = 4096, seed: int = 0) -> InferenceEngine:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    cfg = cfg.replace(vocab_size=max(512, min(cfg.vocab_size, 512)))
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    if checkpoint:
+        params, meta = load(checkpoint, params)
+        print(f"loaded checkpoint ({meta})")
+    return InferenceEngine(cfg, params, max_seq_len=max_seq_len)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--max-new-tokens", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.2)
+    ap.add_argument("--prompts", nargs="+",
+                    default=["The total revenue for fiscal year 2015 was"])
+    args = ap.parse_args()
+
+    engine = build_engine(args.arch, smoke=args.smoke,
+                          checkpoint=args.checkpoint)
+    outs = engine.generate_batch(args.prompts,
+                                 max_new_tokens=args.max_new_tokens,
+                                 temperature=args.temperature)
+    for p, o in zip(args.prompts, outs):
+        print(f">>> {p!r}\n{o!r}\n")
+    print(f"usage: {engine.usage}")
+
+
+if __name__ == "__main__":
+    main()

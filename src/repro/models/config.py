@@ -1,0 +1,189 @@
+"""Model configuration covering every assigned architecture family.
+
+A single ``ModelConfig`` dataclass describes dense GQA transformers, MoE,
+xLSTM-style SSMs, Mamba/attention hybrids, encoder-decoder (audio) and
+cross-attention VLM decoders.  Configs are plain frozen dataclasses so they
+hash/compare cleanly and can be embedded in jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ----------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+
+    # -- core transformer dims --------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 1024   # 0 -> no FFN (xLSTM blocks carry their own projections)
+    vocab_size: int = 512
+
+    # -- attention options --------------------------------------------------
+    qkv_bias: bool = False            # qwen1.5
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0           # 0 -> full attention
+    tie_embeddings: bool = True
+
+    # -- MoE ---------------------------------------------------------------
+    num_experts: int = 0              # 0 -> dense FFN
+    num_experts_per_tok: int = 0
+    expert_capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+
+    # -- SSM / xLSTM / Mamba -------------------------------------------------
+    ssm_state: int = 0                # mamba state size (hymba)
+    slstm_every: int = 0              # xlstm: every Nth layer is an sLSTM block
+    ssm_proj_factor: float = 2.0      # xlstm up-projection factor
+
+    # -- hybrid (hymba): parallel attention + SSM heads ----------------------
+    hybrid: bool = False
+
+    # -- VLM: cross-attention to vision embeddings ---------------------------
+    cross_attn_every: int = 0         # every Nth decoder layer cross-attends
+    num_image_tokens: int = 0         # patches provided by the (stubbed) frontend
+
+    # -- encoder-decoder (whisper) -------------------------------------------
+    encoder_layers: int = 0
+    num_audio_frames: int = 0         # encoder positions from the (stubbed) frontend
+
+    # -- numerics ------------------------------------------------------------
+    dtype: str = "float32"
+    norm_eps: float = 1e-5
+    remat: bool = False        # activation checkpointing per decoder layer
+    scan_layers: bool = False  # lax.scan over stacked layer units (compile
+                               # time ~O(1) in depth; MaxText-style)
+    grouped_decode: bool = False  # GQA decode without repeat_kv (§Perf)
+    kv_cache_dtype: str = ""   # "" -> activation dtype; "int8" -> quantized
+                               # KV cache with per-(slot, head) scales
+
+    # -- provenance ----------------------------------------------------------
+    source: str = ""
+
+    # ------------------------------------------------------------------ api
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def scan_period(self) -> int:
+        """Smallest p with num_layers % p == 0 and layer kinds periodic with
+        period p — the unit size for scan-over-layers."""
+        kinds = [self.layer_kind(i) for i in range(self.num_layers)]
+        for p in range(1, self.num_layers + 1):
+            if self.num_layers % p:
+                continue
+            if all(kinds[i] == kinds[i % p] for i in range(self.num_layers)):
+                return p
+        return self.num_layers
+
+    def layer_kind(self, layer_idx: int) -> str:
+        """Which block lives at ``layer_idx`` of the decoder stack."""
+        if self.family == "ssm":
+            if self.slstm_every and (layer_idx % self.slstm_every
+                                     == self.slstm_every - 1):
+                return "slstm"
+            return "mlstm"
+        if self.family == "hybrid":
+            return "hybrid"
+        if (self.family == "vlm" and self.cross_attn_every
+                and layer_idx % self.cross_attn_every == self.cross_attn_every - 1):
+            return "cross"
+        return "attn"
+
+    def param_count(self) -> int:
+        """Analytic non-embedding parameter count (used by the cost/latency
+        models and the roofline MODEL_FLOPS term)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q = self.num_heads * hd
+        n_kv = self.num_kv_heads * hd
+        total = 0
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind in ("attn", "cross", "hybrid"):
+                total += d * (n_q + 2 * n_kv) + n_q * d  # QKVO
+            if kind == "hybrid":
+                inner = self.num_heads * hd
+                total += d * 2 * inner + inner * self.ssm_state * 2 + inner * d
+            if kind == "mlstm":
+                inner = int(self.d_model * self.ssm_proj_factor)
+                total += d * 2 * inner + 4 * inner * inner // max(self.num_heads, 1) \
+                    + inner * d
+            if kind == "slstm":
+                inner = int(self.d_model * 4 / 3)
+                total += 4 * d * d + 2 * d * inner
+            if self.d_ff:
+                if self.is_moe:
+                    total += d * self.num_experts  # router
+                    total += self.num_experts * 3 * d * self.d_ff
+                else:
+                    total += 3 * d * self.d_ff
+        if self.is_encdec:
+            for _ in range(self.encoder_layers):
+                total += d * (n_q + 2 * n_kv) + n_q * d + 2 * d * self.d_ff
+            # decoder cross-attention
+            total += self.num_layers * (d * (n_q + 2 * n_kv) + n_q * d)
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        dense_experts = self.num_layers * self.num_experts * 3 * d * self.d_ff
+        active_experts = (self.num_layers * self.num_experts_per_tok
+                          * 3 * d * self.d_ff)
+        return self.param_count() - dense_experts + active_experts
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_input_shape(name: str) -> InputShape:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown input shape {name!r}; have "
+                   f"{[s.name for s in INPUT_SHAPES]}")

@@ -1,0 +1,434 @@
+"""Core neural layers shared across all architecture families.
+
+Everything is a pure function over explicit parameter pytrees (nested dicts of
+jnp arrays) so the same code runs under jit, pjit/shard_map and the dry-run
+lowering path.  Initialisation mirrors the layer structure 1:1.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# initialisation helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def head_rms_norm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Parameter-free per-head RMS norm (used after SSM/mLSTM heads)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs       # (..., seq, hd/2)
+    angles = angles[..., None, :]                                   # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# feed-forward
+# --------------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ params["gate"])
+    # row-parallel down-projection: pin the output (and thus any GSPMD
+    # partial-sum all-reduce) to the activation dtype, not the f32
+    # accumulator (§Perf: halves TP activation collectives)
+    return jnp.matmul(g * (x @ params["up"]), params["down"],
+                      preferred_element_type=x.dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d_model, d_ff, dtype),
+            "down": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(jax.nn.gelu(x @ params["up"]), params["down"],
+                      preferred_element_type=x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(params: dict, x: jnp.ndarray, num_heads: int,
+                num_kv_heads: int, head_dim: int):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(b, s, num_heads, head_dim),
+            k.reshape(b, s, num_kv_heads, head_dim),
+            v.reshape(b, s, num_kv_heads, head_dim))
+
+
+def repeat_kv(x: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    if q_per_kv == 1:
+        return x
+    return jnp.repeat(x, q_per_kv, axis=2)
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int = 0,
+                    segment_ids: Optional[jnp.ndarray] = None,
+                    kv_segment_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference attention.  q,k,v: (B, S, H, hd) with H already equal
+    (kv repeated).  Materialises the score matrix; only used for short
+    sequences and as the test oracle."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos + (sk - sq)
+    if window:
+        mask &= kpos > qpos + (sk - sq) - window
+    mask = mask[None, None]
+    if segment_ids is not None:
+        kv_seg = segment_ids if kv_segment_ids is None else kv_segment_ids
+        seg = segment_ids[:, None, :, None] == kv_seg[:, None, None, :]
+        mask = mask & seg
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _block_mask(qi, kj, q_block, kv_block, offset, causal, window,
+                seg_q_blk, seg_k_blk):
+    qpos = qi * q_block + jnp.arange(q_block)[:, None] + offset
+    kpos = kj * kv_block + jnp.arange(kv_block)[None, :]
+    mask = jnp.ones((q_block, kv_block), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    mask = mask[None, None]
+    if seg_q_blk is not None:
+        mask = mask & (seg_q_blk[:, None, :, None]
+                       == seg_k_blk[:, None, None, :])
+    return mask
+
+
+def _flash_fwd(q, k, v, segment_ids, causal, window, q_block, kv_block):
+    """Blocked online-softmax forward.  Returns (out, lse) with
+    lse (B, H, S) = m + log(l) (+inf on fully-masked rows)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, sk)
+    nq, nk = sq // q_block, sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+    seg_q = (segment_ids.reshape(b, nq, q_block).transpose(1, 0, 2)
+             if segment_ids is not None else
+             jnp.zeros((nq, b, q_block), jnp.int32))
+    seg_k = (segment_ids.reshape(b, nk, kv_block).transpose(1, 0, 2)
+             if segment_ids is not None else
+             jnp.zeros((nk, b, kv_block), jnp.int32))
+    offset = sk - sq
+    has_seg = segment_ids is not None
+
+    def one_q_block(qi, q_i, seg_q_i):
+        q_i = q_i.astype(jnp.float32) * scale
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            kj, k_j, v_j, seg_k_j = inputs
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i,
+                           k_j.astype(jnp.float32))
+            mask = _block_mask(qi, kj, q_block, kv_block, offset, causal,
+                               window, seg_q_i if has_seg else None,
+                               seg_k_j if has_seg else None)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_j.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nk), kb, vb, seg_k))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)),
+                        -NEG_INF)
+        return out, lse  # (b,h,qb,hd), (b,h,qb)
+
+    out, lse = jax.lax.map(lambda args: one_q_block(*args),
+                           (jnp.arange(nq), qb, seg_q))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    lse = lse.transpose(1, 2, 0, 3).reshape(b, h, sq)
+    return out, lse
+
+
+def _flash_bwd(q, k, v, segment_ids, out, lse, dout, causal, window,
+               q_block, kv_block):
+    """Recompute-based flash backward: no (S, S) residuals are ever saved.
+
+    Two passes — dq (map q blocks, scan kv) and dk/dv (map kv blocks,
+    scan q) — each recomputing p = exp(s - lse) from q, k on the fly.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // q_block, sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    offset = sk - sq
+    has_seg = segment_ids is not None
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    doutf = dout.astype(jnp.float32)
+    delta = jnp.einsum("bshd,bshd->bhs", doutf, out.astype(jnp.float32))
+
+    def blk(t, n, blk_sz):
+        return t.reshape(b, n, blk_sz, h, hd).transpose(1, 0, 3, 2, 4)
+
+    qb, kb, vb = blk(qf, nq, q_block), blk(kf, nk, kv_block), \
+        blk(vf, nk, kv_block)
+    dob = blk(doutf, nq, q_block)
+    lse_b = lse.reshape(b, h, nq, q_block).transpose(2, 0, 1, 3)
+    delta_b = delta.reshape(b, h, nq, q_block).transpose(2, 0, 1, 3)
+    seg_q = (segment_ids.reshape(b, nq, q_block).transpose(1, 0, 2)
+             if has_seg else jnp.zeros((nq, b, q_block), jnp.int32))
+    seg_k = (segment_ids.reshape(b, nk, kv_block).transpose(1, 0, 2)
+             if has_seg else jnp.zeros((nk, b, kv_block), jnp.int32))
+
+    def p_block(qi, kj, q_i, k_j, lse_i, seg_q_i, seg_k_j):
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_i * scale, k_j)
+        mask = _block_mask(qi, kj, q_block, kv_block, offset, causal,
+                           window, seg_q_i if has_seg else None,
+                           seg_k_j if has_seg else None)
+        s = jnp.where(mask, s, NEG_INF)
+        return jnp.exp(s - lse_i[..., None])
+
+    # pass 1: dq
+    def dq_block(args):
+        qi, q_i, do_i, lse_i, dl_i, seg_q_i = args
+
+        def kv_step(dq_acc, inputs):
+            kj, k_j, v_j, seg_k_j = inputs
+            p = p_block(qi, kj, q_i, k_j, lse_i, seg_q_i, seg_k_j)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", do_i, v_j)
+            ds = p * (dp - dl_i[..., None])
+            return dq_acc + jnp.einsum("bhqk,bhkd->bhqd", ds, k_j) * scale, \
+                None
+
+        dq0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        dq_i, _ = jax.lax.scan(kv_step, dq0,
+                               (jnp.arange(nk), kb, vb, seg_k))
+        return dq_i
+
+    dq = jax.lax.map(dq_block, (jnp.arange(nq), qb, dob, lse_b, delta_b,
+                                seg_q))
+    dq = dq.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+
+    # pass 2: dk, dv
+    def dkv_block(args):
+        kj, k_j, v_j, seg_k_j = args
+
+        def q_step(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, q_i, do_i, lse_i, dl_i, seg_q_i = inputs
+            p = p_block(qi, kj, q_i, k_j, lse_i, seg_q_i, seg_k_j)
+            dv_acc = dv_acc + jnp.einsum("bhqk,bhqd->bhkd", p, do_i)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", do_i, v_j)
+            ds = p * (dp - dl_i[..., None])
+            dk_acc = dk_acc + jnp.einsum("bhqk,bhqd->bhkd", ds, q_i) * scale
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, h, kv_block, hd), jnp.float32)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            q_step, (z, z),
+            (jnp.arange(nq), qb, dob, lse_b, delta_b, seg_q))
+        return dk_j, dv_j
+
+    dk, dv = jax.lax.map(dkv_block, (jnp.arange(nk), kb, vb, seg_k))
+    dk = dk.transpose(1, 0, 3, 2, 4).reshape(b, sk, h, hd)
+    dv = dv.transpose(1, 0, 3, 2, 4).reshape(b, sk, h, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention(q, k, v, segment_ids, causal=True, window=0,
+                    q_block=512, kv_block=512):
+    out, _ = _flash_fwd(q, k, v, segment_ids, causal, window, q_block,
+                        kv_block)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, segment_ids, causal, window, q_block, kv_block):
+    out, lse = _flash_fwd(q, k, v, segment_ids, causal, window, q_block,
+                          kv_block)
+    return out, (q, k, v, segment_ids, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, segment_ids, out, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, segment_ids, out, lse, dout, causal,
+                            window, q_block, kv_block)
+    dseg = (None if segment_ids is None else
+            np.zeros(segment_ids.shape, jax.dtypes.float0))
+    return dq, dk, dv, dseg
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      segment_ids: Optional[jnp.ndarray] = None,
+                      q_block: int = 512, kv_block: int = 512) -> jnp.ndarray:
+    """Flash-style attention in pure jnp (see _flash_fwd); the full (Sq, Sk)
+    score matrix is never materialised in forward OR backward."""
+    return flash_attention(q, k, v, segment_ids, causal, window, q_block,
+                           kv_block)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              segment_ids: Optional[jnp.ndarray] = None,
+              dense_threshold: int = 2048) -> jnp.ndarray:
+    """Dispatch: dense for short sequences, blocked-flash for long ones."""
+    sq, sk = q.shape[1], k.shape[1]
+    if max(sq, sk) <= dense_threshold or sq % 512 or sk % 512:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               segment_ids=segment_ids)
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             segment_ids=segment_ids)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
+                     slot_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-token attention vs. a cache.
+
+    q: (B, 1, H, hd); caches: (B, L, Hkv_rep, hd) already head-repeated.
+    valid_len: scalar or (B,) count of valid cache slots.  For a ring-buffer
+    sliding-window cache all slots < min(valid_len, L) are valid and
+    ordering is irrelevant for softmax.  ``slot_mask`` (B, L) additionally
+    marks slots holding real (non-padding) tokens.
+    """
+    b, lcache, h, hd = k_cache.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache) / math.sqrt(hd)
+    slot = jnp.arange(lcache)[None, :]
+    vl = jnp.asarray(valid_len)
+    vl = vl[:, None] if vl.ndim else vl[None, None]
+    mask = slot < jnp.minimum(vl, lcache) if window else slot < vl
+    if slot_mask is not None:
+        mask = mask & slot_mask
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+
+
+def decode_attention_grouped(q, k_cache, v_cache, valid_len, *,
+                             window: int = 0,
+                             slot_mask: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
+    """GQA decode attention WITHOUT materialising repeat_kv.
+
+    q: (B, 1, H, hd); caches: (B, L, Hkv, hd) kept at native head count —
+    the grouped einsum reads each cache byte once instead of q_per_kv
+    times (the §Perf decode hillclimb; same strategy as the Pallas
+    gqa_decode kernel)."""
+    b, lcache, hkv, hd = k_cache.shape
+    h = q.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg, k_cache) / math.sqrt(hd)
+    slot = jnp.arange(lcache)[None, :]
+    vl = jnp.asarray(valid_len)
+    vl = vl[:, None] if vl.ndim else vl[None, None]
+    mask = slot < jnp.minimum(vl, lcache) if window else slot < vl
+    if slot_mask is not None:
+        mask = mask & slot_mask
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(
+        q.dtype)
+    out = jnp.einsum("bkgql,blkd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer (granite-moe, olmoe families).
+
+Top-k routing with grouped, capacity-based einsum dispatch — the classic
+GSPMD expert-parallel formulation (Switch/GShard): tokens are split into
+groups, each group dispatches into an ``(experts, capacity, d_model)``
+buffer via one-hot einsums, expert FFNs run batched over the expert axis,
+and results are combined back.  With the expert axis sharded over the mesh
+``model`` axis, GSPMD lowers dispatch/combine into all-to-alls — the
+communication pattern of expert parallelism.
+
+Grouping bounds the dispatch one-hot to
+``(groups, group_size, experts, capacity)`` so peak memory stays flat with
+global token count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d_model, num_experts, jnp.float32),
+        "gate": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(kg, num_experts)),
+        "up": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ku, num_experts)),
+        "down": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(kd, num_experts)),
+    }
+
+
+def _capacity(group_size: int, top_k: int, num_experts: int,
+              factor: float) -> int:
+    cap = max(int(group_size * top_k * factor / num_experts), 4)
+    if cap > 8:
+        cap = ((cap + 7) // 8) * 8  # lane-friendly
+    return cap
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 1024,
+            return_aux: bool = False):
+    """x: (B, S, D) -> (B, S, D) plus optional router load-balance loss."""
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = min(group_size, n_tok)
+    assert n_tok % gs == 0, (n_tok, gs)
+    g = n_tok // gs
+    xt = x.reshape(g, gs, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G,T,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)             # (G,T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = _capacity(gs, top_k, num_experts, capacity_factor)
+
+    # position of each (token, k) assignment inside its expert buffer,
+    # priority ordered by (k, token index) within the group
+    idx_flat = gate_idx.transpose(0, 2, 1).reshape(g, top_k * gs)  # (G, K*T)
+    onehot_flat = jax.nn.one_hot(idx_flat, num_experts, dtype=jnp.int32)
+    pos_flat = jnp.cumsum(onehot_flat, axis=1) - onehot_flat       # (G,K*T,E)
+    pos_flat = jnp.sum(pos_flat * onehot_flat, axis=-1)            # (G,K*T)
+    pos = pos_flat.reshape(g, top_k, gs).transpose(0, 2, 1)        # (G,T,K)
+    keep = pos < cap
+
+    dispatch = jnp.zeros((g, gs, num_experts, cap), x.dtype)
+    combine = jnp.zeros((g, gs, num_experts, cap), x.dtype)
+    for k in range(top_k):
+        oe = jax.nn.one_hot(gate_idx[..., k], num_experts, dtype=x.dtype)
+        oc = jax.nn.one_hot(pos[..., k], cap, dtype=x.dtype)
+        oc = oc * keep[..., k, None].astype(x.dtype)
+        hot = oe[..., :, None] * oc[..., None, :]                  # (G,T,E,C)
+        dispatch = dispatch + hot
+        combine = combine + hot * gate_vals[..., k, None, None].astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)         # (G,E,C,D)
+    act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["gate"]))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", act * up, params["down"])
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    out = out.reshape(b, s, d)
+
+    if not return_aux:
+        return out
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac = jnp.mean(
+        jax.nn.one_hot(gate_idx.reshape(g, -1), num_experts,
+                       dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = num_experts * jnp.sum(frac * mean_prob)
+    return out, aux

@@ -1,0 +1,326 @@
+"""Recurrent / state-space blocks: xLSTM (mLSTM + sLSTM) and Mamba-style SSM.
+
+TPU adaptation notes (see DESIGN.md §3):
+  * mLSTM is implemented in its *chunkwise-parallel* form (gated-linear-
+    attention math): intra-chunk terms are dense matmuls that feed the MXU,
+    inter-chunk state is carried by a short ``lax.scan`` over chunks. This is
+    the TPU-native equivalent of the CUDA recurrent kernels in the xLSTM
+    paper.
+  * Chunk isolation for MinionS parallel jobs is achieved by *state reset at
+    segment boundaries* (forget gate forced to 0), since block-diagonal
+    attention masks have no meaning for a recurrence.
+  * sLSTM has true hidden-state feedback (non-associative) and stays a
+    sequential ``lax.scan``; Mamba's diagonal recurrence also uses a scan.
+
+All public functions return ``(output, new_state)`` so the same code path
+serves training (state discarded), prefill (state kept) and decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, head_rms_norm
+
+LOG_EPS = -1e9
+
+
+# ===========================================================================
+# mLSTM (chunkwise gated linear attention form)
+# ===========================================================================
+
+
+def init_mlstm(key, d_model: int, num_heads: int, proj_factor: float,
+               dtype) -> dict:
+    inner = int(d_model * proj_factor)
+    assert inner % num_heads == 0
+    ks = jax.random.split(key, 8)
+    hd = inner // num_heads
+    return {
+        "w_up": dense_init(ks[0], d_model, inner, dtype),
+        "w_gate": dense_init(ks[1], d_model, inner, dtype),
+        "w_q": dense_init(ks[2], inner, inner, dtype),
+        "w_k": dense_init(ks[3], inner, inner, dtype),
+        "w_v": dense_init(ks[4], inner, inner, dtype),
+        "w_if": dense_init(ks[5], d_model, 2 * num_heads, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((num_heads,)),
+                                 jnp.full((num_heads,), 3.0)]).astype(
+                                     jnp.float32),
+        "w_down": dense_init(ks[6], inner, d_model, dtype),
+        "_hd": jnp.zeros((hd,), dtype),  # marker, keeps head_dim in the tree
+    }
+
+
+def _mlstm_qkvg(params, x, num_heads):
+    b, s, _ = x.shape
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    inner = up.shape[-1]
+    hd = inner // num_heads
+    q = (up @ params["w_q"]).reshape(b, s, num_heads, hd)
+    k = (up @ params["w_k"]).reshape(b, s, num_heads, hd) / math.sqrt(hd)
+    v = (up @ params["w_v"]).reshape(b, s, num_heads, hd)
+    ifg = x.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_gate = jax.nn.sigmoid(ifg[..., :num_heads])            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(ifg[..., num_heads:])         # (B,S,H)
+    return q, k, v, gate, i_gate, log_f
+
+
+def mlstm_block(params: dict, x: jnp.ndarray, *, num_heads: int,
+                chunk: int = 256,
+                segment_ids: Optional[jnp.ndarray] = None,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D).  Returns (out (B,S,D), state (B,H,hd,hd))."""
+    b, s, d = x.shape
+    q, k, v, gate, i_gate, log_f = _mlstm_qkvg(params, x, num_heads)
+    hd = q.shape[-1]
+
+    if segment_ids is not None:
+        is_start = jnp.concatenate(
+            [jnp.ones((b, 1), bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+        log_f = jnp.where(is_start[..., None], LOG_EPS, log_f)
+
+    if s % chunk:
+        pad = chunk - s % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    sp = q.shape[1]
+    nc = sp // chunk
+
+    def to_chunks(t, extra_dims):
+        return t.reshape((b, nc, chunk) + extra_dims).swapaxes(0, 1)
+
+    qc = to_chunks(q, (num_heads, hd)).astype(jnp.float32)
+    kc = to_chunks(k, (num_heads, hd)).astype(jnp.float32)
+    vc = to_chunks(v, (num_heads, hd)).astype(jnp.float32)
+    ic = to_chunks(i_gate, (num_heads,))
+    fc = to_chunks(log_f, (num_heads,))
+
+    if initial_state is None:
+        state0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        qi, ki, vi, ii, fi = inp          # (B,C,H,hd) / (B,C,H)
+        cum = jnp.cumsum(fi, axis=1)      # inclusive cumulative log forget
+        # intra-chunk: scores[t,s] = (q_t . k_s) * exp(cum_t - cum_s) * i_s
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,T,S,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri[None, :, :, None],
+                          jnp.exp(jnp.clip(diff, LOG_EPS, 0.0)), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki) * decay \
+            * ii[:, None, :, :]
+        h_intra = jnp.einsum("btsh,bshd->bthd", scores, vi)
+        # inter-chunk: h_t += (q_t * exp(cum_t)) @ state
+        qdec = qi * jnp.exp(cum)[..., None]
+        h_inter = jnp.einsum("bthk,bhkv->bthv", qdec, state)    # (B,T,H,hd)
+        h = h_intra + h_inter
+        # state update
+        total = cum[:, -1, :]                                   # (B,H)
+        kdec = ki * jnp.exp(jnp.clip(total[:, None, :] - cum, LOG_EPS, 0.0)
+                            )[..., None] * ii[..., None]
+        state_new = state * jnp.exp(total)[:, :, None, None] \
+            + jnp.einsum("bshk,bshv->bhkv", kdec, vi)
+        return state_new, h
+
+    state, hs = jax.lax.scan(chunk_step, state0, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(b, sp, num_heads, hd)[:, :s]
+    h = head_rms_norm(h).reshape(b, s, num_heads * hd).astype(x.dtype)
+    out = (h * jax.nn.silu(gate)) @ params["w_down"]
+    return out, state.astype(jnp.float32)
+
+
+def mlstm_decode_step(params: dict, x: jnp.ndarray, state: jnp.ndarray, *,
+                      num_heads: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, 1, D); state: (B, H, hd, hd)."""
+    b = x.shape[0]
+    q, k, v, gate, i_gate, log_f = _mlstm_qkvg(params, x, num_heads)
+    hd = q.shape[-1]
+    q1 = q[:, 0].astype(jnp.float32)      # (B,H,hd)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    i1 = i_gate[:, 0]                      # (B,H)
+    f1 = jnp.exp(log_f[:, 0])
+    state = state * f1[:, :, None, None] + i1[:, :, None, None] \
+        * k1[..., None] * v1[:, :, None, :]
+    h = jnp.einsum("bhk,bhkv->bhv", q1, state)
+    h = head_rms_norm(h).reshape(b, 1, num_heads * hd).astype(x.dtype)
+    out = (h * jax.nn.silu(gate)) @ params["w_down"]
+    return out, state
+
+
+# ===========================================================================
+# sLSTM (scalar memory, exponential gating, hidden feedback)
+# ===========================================================================
+
+
+def init_slstm(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    hd = d_model // num_heads
+    ffn = int(d_model * 4 / 3)
+    ffn = ((ffn + 7) // 8) * 8
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, jnp.float32),
+        # block-diagonal recurrent weights: (H, hd, 4*hd)
+        "r_gates": (jax.random.normal(ks[1], (num_heads, hd, 4 * hd))
+                    / math.sqrt(hd)).astype(jnp.float32),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "w_up": dense_init(ks[2], d_model, ffn, dtype),
+        "w_down": dense_init(ks[3], ffn, d_model, dtype),
+    }
+
+
+def slstm_block(params: dict, x: jnp.ndarray, *, num_heads: int,
+                initial_state: Optional[dict] = None,
+                segment_ids: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """Sequential sLSTM.  x: (B,S,D) -> (out, state dict)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    pre = x.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    pre = pre.reshape(b, s, 4, num_heads, hd)
+
+    if initial_state is None:
+        zeros = jnp.zeros((b, num_heads, hd), jnp.float32)
+        state0 = {"c": zeros, "n": zeros, "h": zeros,
+                  "m": jnp.full((b, num_heads, hd), -10.0)}
+    else:
+        state0 = initial_state
+
+    if segment_ids is not None:
+        is_start = jnp.concatenate(
+            [jnp.ones((b, 1), bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+    else:
+        is_start = jnp.zeros((b, s), bool)
+
+    r = params["r_gates"]
+
+    def step(state, inp):
+        pre_t, start_t = inp               # (B,4,H,hd), (B,)
+        h_prev = jnp.where(start_t[:, None, None], 0.0, state["h"])
+        c_prev = jnp.where(start_t[:, None, None], 0.0, state["c"])
+        n_prev = jnp.where(start_t[:, None, None], 0.0, state["n"])
+        m_prev = jnp.where(start_t[:, None, None], -10.0, state["m"])
+        rec = jnp.einsum("bhk,hkg->bhg", h_prev, r).reshape(
+            b, num_heads, 4, hd).swapaxes(1, 2)                 # (B,4,H,hd)
+        g = pre_t + rec
+        i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_t = jnp.maximum(log_f + m_prev, i_t)
+        i_p = jnp.exp(i_t - m_t)
+        f_p = jnp.exp(log_f + m_prev - m_t)
+        c_t = f_p * c_prev + i_p * jnp.tanh(z_t)
+        n_t = f_p * n_prev + i_p
+        h_t = jax.nn.sigmoid(o_t) * c_t / jnp.maximum(n_t, 1e-6)
+        new = {"c": c_t, "n": n_t, "h": h_t, "m": m_t}
+        return new, h_t
+
+    pre_t = pre.swapaxes(0, 1)             # (S,B,4,H,hd)
+    state, hs = jax.lax.scan(step, state0, (pre_t, is_start.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jax.nn.gelu(h @ params["w_up"]) @ params["w_down"]
+    return out, state
+
+
+def slstm_decode_step(params, x, state, *, num_heads):
+    out, new_state = slstm_block(params, x, num_heads=num_heads,
+                                 initial_state=state)
+    return out, new_state
+
+
+# ===========================================================================
+# Mamba-style selective SSM (hymba's SSM heads)
+# ===========================================================================
+
+
+def init_mamba(key, d_model: int, inner: int, ssm_state: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    conv_k = 4
+    return {
+        "w_in": dense_init(ks[0], d_model, inner, dtype),
+        "w_gate": dense_init(ks[1], d_model, inner, dtype),
+        "conv": (jax.random.normal(ks[2], (conv_k, inner))
+                 / math.sqrt(conv_k)).astype(dtype),
+        "w_dt": dense_init(ks[3], inner, inner, jnp.float32),
+        "b_dt": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (inner,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(
+                                           jnp.float32),
+        "w_B": dense_init(ks[5], inner, ssm_state, jnp.float32),
+        "w_C": dense_init(ks[6], inner, ssm_state, jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, ssm_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(inner, 0),
+        "D": jnp.ones((inner,), jnp.float32),
+    }
+
+
+def _mamba_conv(params, u, conv_state=None):
+    """Causal depthwise conv, kernel 4.  u: (B,S,inner)."""
+    k = params["conv"].shape[0]
+    if conv_state is None:
+        upad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        upad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = sum(upad[:, i:i + u.shape[1]] * params["conv"][i]
+              for i in range(k))
+    new_conv_state = upad[:, -(k - 1):]
+    return jax.nn.silu(out), new_conv_state
+
+
+def mamba_block(params: dict, x: jnp.ndarray, *,
+                segment_ids: Optional[jnp.ndarray] = None,
+                initial_state: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B,S,D) -> (B,S,inner) pre-output (caller fuses/projects)."""
+    b, s, _ = x.shape
+    u = x @ params["w_in"]
+    z = x @ params["w_gate"]
+    conv_state = None if initial_state is None else initial_state["conv"]
+    u, new_conv = _mamba_conv(params, u, conv_state)
+    uf = u.astype(jnp.float32)
+    dt = jax.nn.softplus(uf @ params["w_dt"] + params["b_dt"])   # (B,S,inner)
+    Bm = uf @ params["w_B"]                                       # (B,S,n)
+    Cm = uf @ params["w_C"]                                       # (B,S,n)
+    A = -jnp.exp(params["A_log"])                                 # (inner,n)
+
+    decay = jnp.exp(dt[..., None] * A)                            # (B,S,inner,n)
+    drive = (dt * uf)[..., None] * Bm[:, :, None, :]              # (B,S,inner,n)
+    if segment_ids is not None:
+        is_start = jnp.concatenate(
+            [jnp.ones((b, 1), bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+        decay = jnp.where(is_start[:, :, None, None], 0.0, decay)
+
+    if initial_state is None:
+        h0 = jnp.zeros((b,) + decay.shape[2:], jnp.float32)
+    else:
+        h0 = initial_state["ssm"]
+
+    def step(h, inp):
+        dec_t, drv_t, c_t = inp
+        h = dec_t * h + drv_t                                     # (B,inner,n)
+        y = jnp.einsum("bin,bn->bi", h, c_t)
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (decay.swapaxes(0, 1), drive.swapaxes(0, 1),
+                   Cm.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + uf * params["D"]                      # (B,S,inner)
+    out = (y.astype(x.dtype) * jax.nn.silu(z))
+    return out, {"ssm": h_last, "conv": new_conv}
+
+
+def mamba_decode_step(params, x, state):
+    out, new_state = mamba_block(params, x, initial_state=state)
+    return out, new_state

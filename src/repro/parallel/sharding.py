@@ -1,0 +1,289 @@
+"""Sharding rules: map every param/batch/cache leaf to a PartitionSpec.
+
+Logical plan (DESIGN.md §6):
+  batch            -> ("pod", "data")    data parallel; pods add DP
+  q heads / ffn / vocab -> "model"       tensor parallel, only when the
+                                         dimension is head-aligned for the
+                                         mesh (else replicate — never force
+                                         GSPMD into involuntary resharding)
+  kv heads         -> "model" when kv_heads % model == 0; otherwise the KV
+                      *sequence* is sharded over "model" (flash-decode
+                      style context parallelism: partial softmax stats are
+                      all-reduced, which is tiny for single-token decode)
+  experts          -> "model"            expert parallel; GSPMD emits the
+                                         all-to-alls from dispatch einsums
+  SSM (xLSTM)      -> replicated params  (350M-class models are DP-only in
+                                         practice; recurrent state shards
+                                         over batch)
+
+Every rule checks divisibility against actual mesh axis sizes so ANY
+(arch × shape × mesh) combination lowers cleanly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_axis_size(mesh, a) for a in axis)
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim_size: int, axis):
+    """axis if it divides dim_size, else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def data_axes(mesh: Mesh, pure_dp: bool = False) -> Tuple[str, ...]:
+    """pure_dp: small models gain nothing from TP — fold the model axis
+    into data parallelism (batch shards over every mesh axis, params fully
+    replicated, the only collective is one grad all-reduce)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes + ("model",) if pure_dp else axes
+
+
+def _tp_flags(mesh: Mesh, cfg: ModelConfig,
+              decode: bool = False) -> Tuple[bool, bool]:
+    """(q-head TP possible, kv-head TP possible) on this mesh.
+
+    In decode mode q-TP is only used when kv-TP also holds: a head-sharded
+    query against a sequence-sharded cache would force GSPMD to all-gather
+    the whole KV cache (the score tensor cannot be sharded on both axes).
+    """
+    m = _axis_size(mesh, "model")
+    if cfg.family == "ssm":
+        return False, False
+    q_tp = cfg.num_heads % m == 0
+    kv_tp = cfg.num_kv_heads % m == 0
+    if decode:
+        q_tp = q_tp and kv_tp
+    return q_tp, kv_tp
+
+
+# ===========================================================================
+# parameters
+# ===========================================================================
+
+
+def _path_keys(path):
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(k.key)
+        elif hasattr(k, "idx"):
+            keys.append(k.idx)
+        else:
+            keys.append(str(k))
+    return keys
+
+
+def _param_rule(mesh: Mesh, cfg: ModelConfig, decode: bool, path,
+                leaf) -> P:
+    keys = _path_keys(path)
+    name = keys[-1]
+    shape = leaf.shape
+    if cfg.scan_layers and "layers" in keys:
+        # stacked layer units: leading (L/p) dim is never sharded
+        inner = _param_rule_shape(mesh, cfg, decode, name, shape[1:])
+        return P(None, *tuple(inner))
+    return _param_rule_shape(mesh, cfg, decode, name, shape)
+
+
+def _param_rule_shape(mesh: Mesh, cfg: ModelConfig, decode: bool, name,
+                      shape) -> P:
+    m = "model"
+    q_tp, kv_tp = _tp_flags(mesh, cfg, decode)
+    ssm = cfg.family == "ssm"
+
+    if name == "embed":
+        return P(_fit(mesh, shape[0], m), None)
+    if name == "lm_head":
+        return P(None, _fit(mesh, shape[1], m))
+    # decode: single-token activations are tiny, so attention weights may be
+    # flat-sharded even when heads don't align with the mesh (the reshard
+    # of a (B, 1, D) activation is negligible; the weights memory is not)
+    if name == "wq":
+        if q_tp:
+            return P(None, m)
+        return P(None, _fit(mesh, shape[1], m)) if decode else P(None, None)
+    if name in ("wk", "wv"):
+        if kv_tp:
+            return P(None, m)
+        return P(None, _fit(mesh, shape[1], m)) if decode else P(None, None)
+    if name == "bq":
+        return P(m if q_tp else (_fit(mesh, shape[0], m) if decode
+                                 else None))
+    if name in ("bk", "bv"):
+        return P(m if kv_tp else (_fit(mesh, shape[0], m) if decode
+                                  else None))
+    if name in ("wo", "w_fuse"):
+        if q_tp:
+            return P(m, None)
+        return P(_fit(mesh, shape[0], m), None) if decode else P(None, None)
+    if name in ("gate", "up"):
+        if len(shape) == 3:  # MoE (E, D, F): expert parallel
+            return P(_fit(mesh, shape[0], m), None, None)
+        return P(None, _fit(mesh, shape[1], m))
+    if name == "down":
+        if len(shape) == 3:  # MoE (E, F, D)
+            return P(_fit(mesh, shape[0], m), None, None)
+        return P(_fit(mesh, shape[0], m), None)
+    if name == "router":
+        return P(None, None)
+    # xLSTM blocks: replicated (DP-only family)
+    if ssm:
+        return P(*([None] * len(shape)))
+    # hymba mamba path
+    if name in ("w_in", "w_gate", "w_dt"):
+        return P(None, _fit(mesh, shape[1], m))
+    if name == "conv":
+        return P(None, _fit(mesh, shape[1], m))
+    if name in ("w_B", "w_C", "A_log"):
+        return P(_fit(mesh, shape[0], m), None)
+    if name == "D" and len(shape) == 1:
+        return P(_fit(mesh, shape[0], m))
+    # norms, gates, scalars: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(mesh: Mesh, params_shape, cfg: ModelConfig,
+                decode: bool = False, pure_dp: bool = False) -> Any:
+    if pure_dp:
+        return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)),
+                            params_shape)
+    return jax.tree_util.tree_map_with_path(
+        partial(_param_rule, mesh, cfg, decode), params_shape)
+
+
+def opt_state_specs(mesh: Mesh, params_shape, cfg: ModelConfig,
+                    zero1: bool = False, pure_dp: bool = False) -> dict:
+    """Optimizer-state specs.  zero1=True additionally shards Adam moments
+    over the data axes (ZeRO-1): the moments are only touched at the
+    update, so slicing them across DP replicas trades a reduce-scatter /
+    all-gather for a 1/|data| memory footprint."""
+    ps = param_specs(mesh, params_shape, cfg, pure_dp=pure_dp)
+    if zero1:
+        da = data_axes(mesh, pure_dp)
+        da_ax = da if len(da) > 1 else da[0]
+
+        def widen(leaf, spec):
+            dims = list(tuple(spec)) + [None] * (leaf.ndim - len(tuple(spec)))
+            for i, (d, ax) in enumerate(zip(leaf.shape, dims)):
+                if ax is None and d % _axis_size(mesh, da) == 0:
+                    dims[i] = da_ax
+                    break
+            return P(*dims)
+
+        ps = jax.tree.map(widen, params_shape, ps,
+                          is_leaf=lambda x: isinstance(x, P))
+    return {"mu": ps, "nu": ps, "step": P()}
+
+
+# ===========================================================================
+# batches
+# ===========================================================================
+
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, batch_shape,
+                pure_dp: bool = False) -> Any:
+    da = data_axes(mesh, pure_dp)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        b_axis = da if shape[0] % _axis_size(mesh, da) == 0 else None
+        rest = [None] * (len(shape) - 1)
+        return P(b_axis, *rest)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# ===========================================================================
+# decode caches
+# ===========================================================================
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, cache_shape) -> Any:
+    da = data_axes(mesh)
+    da_size = _axis_size(mesh, da)
+    q_tp, kv_tp = _tp_flags(mesh, cfg, decode=True)
+
+    def rule(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if name == "pos" or not shape:
+            return P()
+        stacked = cfg.scan_layers and "layers" in keys
+        if stacked:
+            shape = shape[1:]
+        b = shape[0]
+        b_axis = da if b % da_size == 0 else None
+
+        def done(spec):
+            return P(None, *tuple(spec)) if stacked else spec
+
+        if name in ("k", "v", "ck", "cv"):
+            # (B, L, Hkv, hd)
+            if kv_tp:
+                return done(P(b_axis, None, "model", None))
+            # flash-decode: shard the sequence over "model" (and over the
+            # data axes too when the batch can't use them)
+            seq_axes = []
+            if b_axis is None:
+                seq_axes.extend(da)
+            seq_axes.append("model")
+            seq_axis = tuple(seq_axes)
+            if shape[1] % _axis_size(mesh, seq_axis) != 0:
+                seq_axis = _fit(mesh, shape[1], "model")
+            return done(P(b_axis, seq_axis, None, None))
+        if name in ("k_scale", "v_scale"):
+            # (B, L, Hkv): follows the k/v sharding minus the head_dim
+            if kv_tp:
+                return done(P(b_axis, None, "model"))
+            seq_axes = (tuple(da) + ("model",)) if b_axis is None \
+                else ("model",)
+            seq_axis = seq_axes if shape[1] % _axis_size(
+                mesh, seq_axes) == 0 else _fit(mesh, shape[1], "model")
+            return done(P(b_axis, seq_axis, None))
+        if name == "slot_mask":
+            seq_axis = None
+            if not kv_tp:
+                cand = tuple(da) + ("model",) if b_axis is None \
+                    else ("model",)
+                if shape[1] % _axis_size(mesh, cand) == 0:
+                    seq_axis = cand
+            return P(b_axis, seq_axis)
+        if name == "state":      # mlstm (B, H, hd, hd): DP only
+            return done(P(b_axis, None, None, None))
+        if name == "ssm":        # mamba (B, inner, n)
+            return done(P(b_axis, _fit(mesh, shape[1], "model"), None))
+        if name == "conv":       # (B, k-1, inner)
+            return done(P(b_axis, None, _fit(mesh, shape[2], "model")))
+        if name in ("c", "n", "h", "m"):  # slstm (B, H, hd): DP only
+            return done(P(b_axis, None, None))
+        return done(P(*([b_axis] + [None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ===========================================================================
+# shardings (specs bound to a mesh)
+# ===========================================================================
+
+
+def to_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

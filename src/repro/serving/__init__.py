@@ -1,0 +1,7 @@
+from .engine import EngineUsage, InferenceEngine
+from .scheduler import JobScheduler, ScheduledResult
+from .sampler import sample
+from .tokenizer import ByteTokenizer, approx_tokens
+
+__all__ = ["InferenceEngine", "EngineUsage", "JobScheduler",
+           "ScheduledResult", "sample", "ByteTokenizer", "approx_tokens"]

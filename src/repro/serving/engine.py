@@ -1,0 +1,132 @@
+"""Batched inference engine: the MinionS local execute substrate.
+
+Left-pads ragged prompt batches (segment ids mask the padding), runs a
+jitted prefill, then a jitted single-token decode loop with a ring-buffer
+KV/state cache.  Shapes are bucketed (next power of two) so repeated
+protocol rounds reuse compiled executables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+from .sampler import sample
+from .tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class EngineUsage:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    calls: int = 0
+
+    def add(self, prefill: int, decode: int):
+        self.prefill_tokens += prefill
+        self.decode_tokens += decode
+        self.calls += 1
+
+
+def _bucket(n: int, minimum: int = 64) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class InferenceEngine:
+    """Serves one JAX model for batched generation."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 tokenizer: Optional[ByteTokenizer] = None,
+                 max_seq_len: int = 4096, decode_margin: int = 256,
+                 truncate_long: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.tokenizer = tokenizer or ByteTokenizer()
+        self.max_seq_len = max_seq_len
+        self.decode_margin = decode_margin
+        self.truncate_long = truncate_long
+        self.usage = EngineUsage()
+
+        self._prefill = jax.jit(
+            partial(T.prefill, cfg=cfg), static_argnames=("capacity",))
+        self._decode = jax.jit(lambda params, tok, cache: T.decode_step(
+            params, cfg, tok, cache))
+
+    # ------------------------------------------------------------------
+    def _prepare_batch(self, prompt_ids: Sequence[Sequence[int]]
+                       ) -> Tuple[Dict[str, jnp.ndarray], int]:
+        """Left-pad to a shared bucketed length; segment -1 marks padding."""
+        if self.truncate_long:
+            # keep the prompt TAIL (instructions come last in the worker
+            # format); graceful degradation for over-long chunks
+            lim = self.max_seq_len
+            prompt_ids = [p if len(p) <= lim else p[-lim:]
+                          for p in prompt_ids]
+        max_len = max(len(p) for p in prompt_ids)
+        s = _bucket(max_len)
+        if s > self.max_seq_len:
+            raise ValueError(f"prompt length {max_len} exceeds engine "
+                             f"max_seq_len {self.max_seq_len}")
+        b = len(prompt_ids)
+        toks = np.full((b, s), ByteTokenizer.PAD, np.int32)
+        segs = np.full((b, s), -1, np.int32)
+        for i, ids in enumerate(prompt_ids):
+            toks[i, s - len(ids):] = ids
+            segs[i, s - len(ids):] = 0
+        return {"tokens": jnp.asarray(toks),
+                "segment_ids": jnp.asarray(segs)}, s
+
+    # ------------------------------------------------------------------
+    def generate_batch(self, prompts: Sequence[str], *,
+                       max_new_tokens: int = 128, temperature: float = 0.0,
+                       key=None, stop: str = "\n###") -> List[str]:
+        """Generate completions for a ragged batch of prompts."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        prompt_ids = [self.tokenizer.encode(p) for p in prompts]
+        batch, s = self._prepare_batch(prompt_ids)
+        capacity = _bucket(s + max_new_tokens + self.decode_margin)
+
+        logits, cache = self._prefill(self.params, batch=batch,
+                                      capacity=capacity)
+        b = len(prompts)
+        done = np.zeros(b, bool)
+        outputs: List[List[int]] = [[] for _ in range(b)]
+        n_decoded = 0
+
+        key, sk = jax.random.split(key)
+        tok = sample(logits[:, -1], sk, temperature=temperature)
+        for step in range(max_new_tokens):
+            tok_np = np.asarray(tok)
+            for i in range(b):
+                if not done[i]:
+                    t = int(tok_np[i])
+                    if t == ByteTokenizer.EOS:
+                        done[i] = True
+                    else:
+                        outputs[i].append(t)
+            n_decoded += int((~done).sum())
+            if done.all() or step == max_new_tokens - 1:
+                break
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            key, sk = jax.random.split(key)
+            tok = sample(logits[:, -1], sk, temperature=temperature)
+
+        self.usage.add(sum(len(p) for p in prompt_ids), n_decoded)
+        texts = [self.tokenizer.decode(o) for o in outputs]
+        if stop:
+            texts = [t.split(stop)[0] for t in texts]
+        return texts
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: str, **kw) -> str:
+        return self.generate_batch([prompt], **kw)[0]

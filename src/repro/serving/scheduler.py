@@ -1,0 +1,47 @@
+"""Job batch scheduler — the "execute locally in parallel" MinionS step.
+
+Takes an arbitrary number of worker prompts, groups them into engine-sized
+batches (optionally replicating each job ``samples`` times for repeated
+test-time sampling, §6.3), runs them through the local engine, and returns
+results in submission order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass
+class ScheduledResult:
+    job_index: int
+    sample_index: int
+    text: str
+
+
+class JobScheduler:
+    def __init__(self, generate_fn: Callable[..., List[str]], *,
+                 max_batch: int = 16):
+        """generate_fn: (prompts, temperature=..., key=...) -> texts."""
+        self.generate_fn = generate_fn
+        self.max_batch = max_batch
+
+    def run(self, prompts: Sequence[str], *, samples: int = 1,
+            temperature: float = 0.2, seed: int = 0,
+            max_new_tokens: int = 128) -> List[ScheduledResult]:
+        expanded = [(ji, si, p)
+                    for ji, p in enumerate(prompts)
+                    for si in range(samples)]
+        results: List[ScheduledResult] = []
+        key = jax.random.PRNGKey(seed)
+        for off in range(0, len(expanded), self.max_batch):
+            group = expanded[off:off + self.max_batch]
+            key, sub = jax.random.split(key)
+            texts = self.generate_fn(
+                [p for _, _, p in group], temperature=temperature, key=sub,
+                max_new_tokens=max_new_tokens)
+            for (ji, si, _), text in zip(group, texts):
+                results.append(ScheduledResult(ji, si, text))
+        results.sort(key=lambda r: (r.job_index, r.sample_index))
+        return results

@@ -1,0 +1,40 @@
+"""Byte-level reversible tokenizer.
+
+Offline-friendly: ids 0..255 are raw bytes; specials follow.  Every model
+vocab in the registry is >= 512 so byte ids are always valid."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class ByteTokenizer:
+    PAD = 256
+    BOS = 257
+    EOS = 258
+    SEP = 259
+    vocab_size = 260
+
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8", errors="replace"))
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        raw = bytes(i for i in ids if 0 <= i < 256)
+        return raw.decode("utf-8", errors="replace")
+
+    def count(self, text: str) -> int:
+        return len(text.encode("utf-8", errors="replace"))
+
+
+_WORD_APPROX_RATIO = 4.0
+
+
+def approx_tokens(text: str) -> int:
+    """Approximate 'LLM tokens' (~4 chars/token) — used by the cost model so
+    reported token counts are comparable with the paper's GPT-4o counts."""
+    return max(1, round(len(text) / _WORD_APPROX_RATIO))

@@ -1,0 +1,9 @@
+from .checkpoint import load, save
+from .data import DataConfig, example_stream
+from .optimizer import AdamWConfig, apply_updates, init_opt_state
+from .train_loop import (TrainState, init_state, loss_fn, make_train_step,
+                         train)
+
+__all__ = ["AdamWConfig", "DataConfig", "TrainState", "apply_updates",
+           "example_stream", "init_opt_state", "init_state", "loss_fn",
+           "make_train_step", "train", "save", "load"]

@@ -1,0 +1,37 @@
+"""Checkpointing: params/opt-state pytrees <-> .npz files (offline-safe)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, str]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    return arrays, str(treedef)
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    np.savez(path, __treedef__=np.asarray(treedef),
+             __meta__=np.asarray(json.dumps(metadata or {})), **arrays)
+
+
+def load(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape-checked)."""
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    restored = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if arr.shape != ref.shape:
+            raise ValueError(f"checkpoint leaf {i} shape {arr.shape} != "
+                             f"expected {ref.shape}")
+        restored.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored), meta

@@ -1,0 +1,117 @@
+"""Synthetic training data pipeline.
+
+Two streams, both derived from the protocol's own task distribution so the
+trained LocalLM is useful *inside* MinionS:
+
+  * worker-SFT: (worker prompt over a chunk → JSON answer) pairs in the
+    exact format ``render_worker`` produces — teaches extraction+abstention.
+  * plain LM: fact-dense document text for generic next-token pretraining.
+
+Examples are byte-tokenised, packed into fixed-length rows with loss masks
+over the target span, and batched as numpy → jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from repro.core.prompts import render_worker
+from repro.core.tasks import METRICS, YEARS, Fact, _fact_value, make_document
+from repro.core.types import JobManifest
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int = 1024
+    batch_size: int = 8
+    worker_frac: float = 0.8
+    n_pages: int = 2
+    seed: int = 0
+
+
+def make_worker_example(rng: random.Random) -> Tuple[str, str]:
+    """One (prompt, target) worker-SFT pair."""
+    company = rng.choice(["AMD", "Initech", "Hooli", "Acme Corp"])
+    n_facts = rng.randint(2, 6)
+    metrics = rng.sample(METRICS, n_facts)
+    year = rng.choice(YEARS)
+    facts = [Fact(m, year, _fact_value(rng)) for m in metrics]
+    doc, _ = make_document(rng, 1, company, facts, sentences_per_page=4)
+    target_fact = rng.choice(facts)
+    ask_missing = rng.random() < 0.3
+    if ask_missing:
+        missing = rng.choice([m for m in METRICS if m not in metrics])
+        task = (f"Extract the value of the {missing} for fiscal year "
+                f"{year}. Abstain if it is not present in this chunk.")
+        answer = {"explanation": "Not found in this chunk.",
+                  "citation": None, "answer": None}
+    else:
+        task = (f"Extract the value of the {target_fact.metric} for fiscal "
+                f"year {year}. Abstain if it is not present in this chunk.")
+        answer = {"explanation": "Located the requested figure in the chunk.",
+                  "citation": target_fact.sentence(),
+                  "answer": f"{target_fact.metric} FY{year}: "
+                            f"{target_fact.value:.1f}"}
+    prompt = render_worker(JobManifest(chunk_id="0", task_id=0, chunk=doc,
+                                       task=task))
+    return prompt, json.dumps(answer)
+
+
+def make_lm_example(rng: random.Random, n_pages: int) -> str:
+    company = rng.choice(["AMD", "Initech", "Hooli", "Acme Corp"])
+    facts = [Fact(m, y, _fact_value(rng))
+             for m in rng.sample(METRICS, 6) for y in rng.sample(YEARS, 2)]
+    doc, _ = make_document(rng, n_pages, company, facts)
+    return doc
+
+
+def example_stream(cfg: DataConfig) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields packed batches: tokens, labels, loss_mask, segment_ids."""
+    tok = ByteTokenizer()
+    rng = random.Random(cfg.seed)
+    while True:
+        rows_tokens = np.full((cfg.batch_size, cfg.seq_len), tok.PAD,
+                              np.int32)
+        rows_mask = np.zeros((cfg.batch_size, cfg.seq_len), np.float32)
+        rows_seg = np.full((cfg.batch_size, cfg.seq_len), -1, np.int32)
+        for b in range(cfg.batch_size):
+            cursor, seg = 0, 0
+            while cursor < cfg.seq_len - 16:
+                remaining = cfg.seq_len - cursor
+                if rng.random() < cfg.worker_frac:
+                    prompt, target = make_worker_example(rng)
+                    p_ids = tok.encode(prompt)
+                    t_ids = tok.encode(target, bos=False, eos=True)
+                    if len(p_ids) + len(t_ids) > remaining:
+                        # whole examples only: fill the tail with LM text
+                        text = make_lm_example(rng, 1)
+                        ids = tok.encode(text, eos=True)[:remaining]
+                        mask_start = 1
+                    else:
+                        ids = p_ids + t_ids
+                        mask_start = len(p_ids)
+                else:
+                    text = make_lm_example(rng, cfg.n_pages)
+                    ids = tok.encode(text, eos=True)[:remaining]
+                    mask_start = 1
+                end = cursor + len(ids)
+                rows_tokens[b, cursor:end] = ids
+                rows_mask[b, cursor + mask_start:end] = 1.0
+                rows_seg[b, cursor:end] = seg
+                cursor = end
+                seg += 1
+        tokens = rows_tokens
+        labels = np.roll(rows_tokens, -1, axis=1)
+        labels[:, -1] = tok.PAD
+        # never train across the segment boundary
+        boundary = np.roll(rows_seg, -1, axis=1) != rows_seg
+        loss_mask = np.roll(rows_mask, -1, axis=1) * (~boundary)
+        loss_mask[:, -1] = 0.0
+        yield {"tokens": tokens, "labels": labels,
+               "loss_mask": loss_mask.astype(np.float32),
+               "segment_ids": rows_seg}

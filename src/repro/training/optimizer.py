@@ -1,0 +1,76 @@
+"""AdamW + cosine schedule, pure JAX over arbitrary param pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+    microbatch: int = 0  # >1: sequential gradient accumulation (shrinks
+                         # live activation memory by the same factor)
+
+
+def init_opt_state(params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig
+                  ) -> Tuple[Any, dict, dict]:
+    """One AdamW step with global-norm clipping.  Returns
+    (params, opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g,
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * g * g,
+                      opt_state["nu"], grads)
+    bc1 = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.beta2 ** step.astype(jnp.float32)
+    lr = schedule(cfg, step)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,111 @@
+"""Training step and loop (pjit-ready).
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function suitable for jax.jit with in/out shardings from
+``repro.parallel.sharding`` — the same function the multi-pod dry-run
+lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Dict[str, Any]
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state), None),
+    lambda _, c: TrainState(*c))
+
+
+def init_state(cfg: ModelConfig, key) -> TrainState:
+    params = T.init_params(cfg, key)
+    return TrainState(params, init_opt_state(params))
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.is_moe:
+        logits, aux = T.forward(params, cfg, batch, return_aux=True)
+    else:
+        logits = T.forward(params, cfg, batch)
+        aux = jnp.zeros((), jnp.float32)
+    ce = T.cross_entropy_loss(logits, batch["labels"],
+                              batch.get("loss_mask"))
+    loss = ce + cfg.router_aux_loss_coef * aux
+    return loss, {"ce": ce, "router_aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    def train_step(state: TrainState, batch: Dict):
+        if opt.microbatch > 1:
+            k = opt.microbatch
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def mb_step(gacc, mbatch):
+                (loss, parts), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mbatch),
+                    has_aux=True)(state.params)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return gacc, (loss, parts)
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, (losses, parts) = jax.lax.scan(mb_step, gacc0, mb)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = jnp.mean(losses)
+            parts = jax.tree.map(jnp.mean, parts)
+        else:
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch), has_aux=True)(state.params)
+        params, opt_state, om = apply_updates(state.params, grads,
+                                              state.opt_state, opt)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, opt: AdamWConfig,
+          data: Iterator[Dict], steps: int, *, seed: int = 0,
+          log_every: int = 10,
+          callback: Optional[Callable[[int, Dict], None]] = None
+          ) -> Tuple[TrainState, Dict]:
+    """Single-host training loop (examples / smoke tests)."""
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    last: Dict = {}
+    t0 = time.time()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            last = {k: float(v) for k, v in metrics.items()}
+            last["step"] = step
+            last["elapsed_s"] = time.time() - t0
+            if callback:
+                callback(step, last)
+    return state, last

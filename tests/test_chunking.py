@@ -1,0 +1,41 @@
+from repro.core.chunking import (PAGE_SEP, chunk_by_chars, chunk_by_page,
+                                 chunk_by_section, chunk_on_multiple_pages,
+                                 split_pages)
+
+
+def test_page_split_roundtrip():
+    doc = PAGE_SEP.join(f"page {i} content" for i in range(10))
+    pages = split_pages(doc)
+    assert len(pages) == 10
+    assert pages[3] == "page 3 content"
+
+
+def test_chunk_on_multiple_pages():
+    doc = PAGE_SEP.join(f"p{i}" for i in range(10))
+    chunks = chunk_on_multiple_pages(doc, pages_per_chunk=3)
+    assert len(chunks) == 4  # 3+3+3+1
+    assert chunks[0].count("p0") == 1 and "p2" in chunks[0]
+
+
+def test_chunk_by_chars_covers_document():
+    doc = "x" * 2500
+    chunks = chunk_by_chars(doc, 1000)
+    assert "".join(chunks) == doc
+    assert [len(c) for c in chunks] == [1000, 1000, 500]
+
+
+def test_unpaged_document_uses_char_budget():
+    doc = "word " * 1000
+    pages = split_pages(doc, page_chars=500)
+    assert all(len(p) <= 500 for p in pages)
+    assert "".join(pages) == doc
+
+
+def test_chunk_by_section_merges_small():
+    doc = "\n\n".join(["tiny"] * 20 + ["B" * 600])
+    sections = chunk_by_section(doc)
+    assert all(len(s) >= 400 or s is sections[-1] for s in sections)
+
+
+def test_chunk_by_page_empty_doc():
+    assert chunk_by_page("") == [""]

@@ -1,0 +1,109 @@
+"""Cost model + latency model fidelity vs. the paper's own numbers."""
+import math
+
+import pytest
+
+from repro.core.cost import GPT4O_JAN2025, CostModel
+from repro.core.latency import (H100_NODE, LLAMA_405B, LLAMA_8B, RTX_4090,
+                                minion_remote_latency, minions_latency_ratio,
+                                minions_local_latency, prop_c1_bound,
+                                remote_only_latency)
+from repro.core.types import Usage
+
+cm = CostModel(GPT4O_JAN2025)
+
+# Paper Table 6: (protocol, dataset) -> (in_tokens_k, out_tokens_k, usd)
+PAPER_TABLE6 = {
+    ("remote", "financebench"): (103.04, 0.32, 0.261),
+    ("remote", "longhealth"): (120.10, 0.07, 0.301),
+    ("remote", "qasper"): (54.40, 0.09, 0.137),
+    ("minion-8b", "financebench"): (0.88, 0.46, 0.007),
+    ("minion-8b", "longhealth"): (1.85, 0.50, 0.010),
+    ("minion-8b", "qasper"): (0.92, 0.42, 0.007),
+    ("minions-8b", "financebench"): (15.99, 1.29, 0.053),
+    ("minions-8b", "longhealth"): (18.96, 0.65, 0.054),
+    ("minions-8b", "qasper"): (5.10, 0.61, 0.019),
+}
+
+
+@pytest.mark.parametrize("key", sorted(PAPER_TABLE6))
+def test_paper_costs_reproduce_to_the_cent(key):
+    in_k, out_k, usd = PAPER_TABLE6[key]
+    ours = cm.usd(Usage(int(in_k * 1000), int(out_k * 1000)))
+    assert abs(ours - usd) < 0.0015, (key, ours, usd)
+
+
+def test_minion_cost_reduction_factor_matches_paper():
+    """Paper: Minion reduces remote cost 38.13x / 31.3x / 20.9x on
+    FB / LH / QASPER respectively."""
+    expected = {"financebench": 38.13, "longhealth": 31.3, "qasper": 20.9}
+    for ds, exp in expected.items():
+        base = Usage(int(PAPER_TABLE6[("remote", ds)][0] * 1000),
+                     int(PAPER_TABLE6[("remote", ds)][1] * 1000))
+        mini = Usage(int(PAPER_TABLE6[("minion-8b", ds)][0] * 1000),
+                     int(PAPER_TABLE6[("minion-8b", ds)][1] * 1000))
+        ratio = cm.usd(base) / cm.usd(mini)
+        assert abs(ratio - exp) / exp < 0.07, (ds, ratio, exp)
+
+
+def test_minions_average_cost_reduction_near_5_7x():
+    ratios = []
+    for ds in ("financebench", "longhealth", "qasper"):
+        base = Usage(int(PAPER_TABLE6[("remote", ds)][0] * 1000),
+                     int(PAPER_TABLE6[("remote", ds)][1] * 1000))
+        ms = Usage(int(PAPER_TABLE6[("minions-8b", ds)][0] * 1000),
+                   int(PAPER_TABLE6[("minions-8b", ds)][1] * 1000))
+        ratios.append(cm.usd(base) / cm.usd(ms))
+    avg = sum(ratios) / 3
+    assert 4.5 < avg < 7.5, ratios  # paper: 5.7x
+
+
+def test_alpha_in_paper_range():
+    assert 1 <= GPT4O_JAN2025.alpha <= 5
+    assert GPT4O_JAN2025.alpha == 4.0
+
+
+# --------------------------------------------------------------------------
+# Appendix C latency models
+# --------------------------------------------------------------------------
+
+
+def test_prop_c1_worked_example_4_75x():
+    """Llama-8B on RTX-4090 + Llama-405B on 8xH100, a=0.2 -> bound 4.75."""
+    bound = prop_c1_bound(LLAMA_8B, LLAMA_405B, RTX_4090, H100_NODE, a=0.2)
+    assert abs(bound - 4.75) < 0.15, bound
+
+
+def test_exact_ratio_below_bound_on_worked_example():
+    n = 100_000
+    c, k, s, p = 10, 2, 1, 0.5
+    n_out_local = int(0.2 * n / (p * c * k * s))
+    ratio = minions_latency_ratio(
+        LLAMA_8B, LLAMA_405B, RTX_4090, H100_NODE, n=n, c=c, k=k, s=s,
+        p_keep=p, n_out_local=n_out_local, n_out_remote=500)
+    bound = prop_c1_bound(LLAMA_8B, LLAMA_405B, RTX_4090, H100_NODE, a=0.2)
+    assert ratio < bound, (ratio, bound)
+
+
+def test_minions_prefill_saves_cross_chunk_attention():
+    """App C.2.3: chunked prefill FLOPs shrink with more chunks."""
+    t1 = minions_local_latency(LLAMA_8B, RTX_4090, 100_000, c=1, k=1, s=1,
+                               p_keep=0.0, n_out_local=0)
+    t10 = minions_local_latency(LLAMA_8B, RTX_4090, 100_000, c=10, k=1, s=1,
+                                p_keep=0.0, n_out_local=0)
+    assert t10 < t1
+    # attention term scales 1/c; matmul term constant
+    assert t10 > t1 / 10
+
+
+def test_remote_latency_monotone_in_tokens():
+    t_small = remote_only_latency(LLAMA_405B, H100_NODE, 1000, 100)
+    t_big = remote_only_latency(LLAMA_405B, H100_NODE, 100_000, 100)
+    assert t_big > t_small
+
+
+def test_minion_remote_reads_only_local_output():
+    t = minion_remote_latency(LLAMA_405B, H100_NODE, n_out_local=500,
+                              n_out_remote=100)
+    t_full = remote_only_latency(LLAMA_405B, H100_NODE, 100_000, 100)
+    assert t < t_full

@@ -1,0 +1,54 @@
+"""Inference engine + scheduler behaviour with a real (untrained) model."""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serving import ByteTokenizer, InferenceEngine, JobScheduler
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return InferenceEngine(cfg, params, max_seq_len=1024)
+
+
+def test_ragged_batch(engine):
+    outs = engine.generate_batch(["a", "bb" * 30, "c" * 100],
+                                 max_new_tokens=4)
+    assert len(outs) == 3
+    assert all(isinstance(o, str) for o in outs)
+
+
+def test_usage_counts(engine):
+    before = engine.usage.prefill_tokens
+    engine.generate_batch(["hello world"], max_new_tokens=4)
+    assert engine.usage.prefill_tokens > before
+    assert engine.usage.decode_tokens >= 1
+
+
+def test_deterministic_greedy(engine):
+    a = engine.generate("determinism", max_new_tokens=8, temperature=0.0)
+    b = engine.generate("determinism", max_new_tokens=8, temperature=0.0)
+    assert a == b
+
+
+def test_too_long_prompt_raises(engine):
+    with pytest.raises(ValueError):
+        engine.generate_batch(["x" * 5000], max_new_tokens=2)
+
+
+def test_scheduler_order_and_samples(engine):
+    sched = JobScheduler(engine.generate_batch, max_batch=4)
+    res = sched.run([f"job {i}" for i in range(5)], samples=2,
+                    max_new_tokens=2)
+    assert len(res) == 10
+    assert [(r.job_index, r.sample_index) for r in res] == \
+        [(j, s) for j in range(5) for s in range(2)]
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    for s in ["hello", "üñïçôdé", "", "a\nb\tc", "数字123"]:
+        assert tok.decode(tok.encode(s)) == s

@@ -1,0 +1,122 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import chunked_prefill, gqa_decode
+from repro.kernels.ref import chunked_prefill_ref, gqa_decode_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,hd,chunk", [
+    (128, 2, 64, 64),
+    (256, 4, 64, 100),    # padding path (256 % 128 == 0 but chunk ragged)
+    (300, 2, 128, 75),    # sequence padding path
+    (512, 1, 32, 512),    # single segment == plain causal
+])
+def test_chunked_prefill_matches_ref(s, h, hd, chunk, dtype):
+    key = jax.random.PRNGKey(s + h)
+    ks = jax.random.split(key, 3)
+    b = 2
+    q = _rand(ks[0], (b, s, h, hd), dtype)
+    k = _rand(ks[1], (b, s, h, hd), dtype)
+    v = _rand(ks[2], (b, s, h, hd), dtype)
+    seg = (jnp.arange(s) // chunk)[None, :].repeat(b, 0).astype(jnp.int32)
+    out = chunked_prefill(q, k, v, seg)
+    ref = chunked_prefill_ref(q, k, v, seg)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_chunked_prefill_gqa_head_repeat():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, s, h, hkv, hd = 1, 128, 8, 2, 64
+    q = _rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = _rand(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = _rand(ks[2], (b, s, hkv, hd), jnp.float32)
+    seg = jnp.zeros((b, s), jnp.int32)
+    out = chunked_prefill(q, k, v, seg)
+    kr = jnp.repeat(k, h // hkv, axis=2)
+    vr = jnp.repeat(v, h // hkv, axis=2)
+    ref = chunked_prefill_ref(q, kr, vr, seg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_chunk_isolation_is_exact():
+    """Jobs must not attend across chunk boundaries: attention over
+    [A;B] with segments == attention over A and B separately."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    b, s, h, hd = 1, 256, 2, 64
+    q = _rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = _rand(ks[1], (b, s, h, hd), jnp.float32)
+    v = _rand(ks[2], (b, s, h, hd), jnp.float32)
+    seg = jnp.concatenate([jnp.zeros(128), jnp.ones(128)]).astype(
+        jnp.int32)[None]
+    joint = chunked_prefill(q, k, v, seg)
+    zero = jnp.zeros((b, 128), jnp.int32)
+    part_a = chunked_prefill(q[:, :128], k[:, :128], v[:, :128], zero)
+    part_b = chunked_prefill(q[:, 128:], k[:, 128:], v[:, 128:], zero)
+    np.testing.assert_allclose(np.asarray(joint[:, :128]),
+                               np.asarray(part_a), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(joint[:, 128:]),
+                               np.asarray(part_b), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,hkv,l", [
+    (8, 2, 256),
+    (8, 8, 512),     # MHA
+    (4, 1, 700),     # MQA + padding path
+    (16, 4, 1024),
+])
+def test_gqa_decode_matches_ref(h, hkv, l, dtype):
+    key = jax.random.PRNGKey(h * l)
+    ks = jax.random.split(key, 3)
+    b, hd = 3, 64
+    q = _rand(ks[0], (b, h, hd), dtype)
+    kc = _rand(ks[1], (b, l, hkv, hd), dtype)
+    vc = _rand(ks[2], (b, l, hkv, hd), dtype)
+    valid = jnp.array([l, max(1, l // 3), max(1, l // 7)], jnp.int32)
+    out = gqa_decode(q, kc, vc, valid)
+    ref = gqa_decode_ref(q, kc, vc, valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_gqa_decode_scalar_valid_len_broadcasts():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    b, h, hkv, hd, l = 2, 4, 2, 32, 256
+    q = _rand(ks[0], (b, h, hd), jnp.float32)
+    kc = _rand(ks[1], (b, l, hkv, hd), jnp.float32)
+    vc = _rand(ks[2], (b, l, hkv, hd), jnp.float32)
+    out = gqa_decode(q, kc, vc, 100)
+    ref = gqa_decode_ref(q, kc, vc, jnp.full((b,), 100, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_gqa_decode_ignores_invalid_slots():
+    """Garbage beyond valid_len must not affect the result."""
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    b, h, hkv, hd, l = 1, 4, 2, 32, 256
+    q = _rand(ks[0], (b, h, hd), jnp.float32)
+    kc = _rand(ks[1], (b, l, hkv, hd), jnp.float32)
+    vc = _rand(ks[2], (b, l, hkv, hd), jnp.float32)
+    out1 = gqa_decode(q, kc, vc, 64)
+    kc2 = kc.at[:, 64:].set(1e4)
+    vc2 = vc.at[:, 64:].set(-1e4)
+    out2 = gqa_decode(q, kc2, vc2, 64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config (2 layers, d_model<=512,
+<=4 experts), one forward + one train step on CPU, shape + NaN checks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.training import AdamWConfig
+from repro.training.train_loop import init_state, make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, b=2, s=32, key=None):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = 0.1 * jax.random.normal(
+            key, (b, cfg.num_image_tokens, cfg.d_model),
+            cfg.activation_dtype)
+    if cfg.is_encdec:
+        batch["enc_embeddings"] = 0.1 * jax.random.normal(
+            key, (b, cfg.num_audio_frames, cfg.d_model),
+            cfg.activation_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = T.forward(params, cfg, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state = init_state(cfg, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(warmup_steps=1,
+                                                    total_steps=10)))
+    batch = _batch(cfg)
+    batch["loss_mask"] = jnp.ones((2, 32), jnp.float32)
+    new_state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0
+    assert not jnp.isnan(metrics["loss"])
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(new_state.params),
+                                jax.tree.leaves(state.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:  # capacity drops are batch-dependent: use dropless
+        cfg = cfg.replace(expert_capacity_factor=float(cfg.num_experts))
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    b, s = 2, 33
+    key = jax.random.PRNGKey(3)
+    batch = _batch(cfg, b, s, key)
+    full = T.forward(params, cfg, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    logits, cache = T.prefill(params, cfg, pre, capacity=s + 8)
+    assert jnp.allclose(logits[:, 0], full[:, -2], atol=3e-4)
+    step_logits, cache = T.decode_step(params, cfg,
+                                       batch["tokens"][:, -1:], cache)
+    assert jnp.allclose(step_logits[:, 0], full[:, -1], atol=3e-4)
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    }
+    for name, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(name)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size) == \
+            (L, d, h, kv, ff, v), name
+
+
+def test_moe_configs():
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.num_experts, g.num_experts_per_tok) == (32, 8)
+    o = get_config("olmoe-1b-7b")
+    assert (o.num_experts, o.num_experts_per_tok) == (64, 8)
+
+
+def test_sliding_window_cache_bounded():
+    cfg = get_smoke_config("hymba-1.5b")
+    cache = T.init_cache(cfg, 2, 4096)
+    k = cache["layers"][0]["k"]
+    assert k.shape[1] == cfg.sliding_window  # ring buffer, not 4096
+
+
+def test_qwen_has_qkv_bias():
+    cfg = get_smoke_config("qwen1.5-32b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    assert "bq" in params["layers"][0]["attn"]

@@ -1,0 +1,134 @@
+"""Beyond-paper performance features: scan-over-layers, flash custom-VJP,
+grouped GQA decode, int8 KV cache, ZeRO-1 specs, microbatch accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.layers import blocked_attention, dense_attention
+from repro.training import AdamWConfig
+from repro.training.train_loop import init_state, make_train_step
+
+
+def _params_pair(cfg):
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cfg_s = cfg.replace(scan_layers=True)
+    params_s = {**params, "layers": T.stack_layers(params["layers"], cfg_s)}
+    return params, params_s, cfg_s
+
+
+@pytest.mark.parametrize("arch", ["granite-34b", "xlstm-350m",
+                                  "llama-3.2-vision-11b", "olmoe-1b-7b"])
+def test_scan_layers_matches_unrolled(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:
+        cfg = cfg.replace(expert_capacity_factor=float(cfg.num_experts))
+    params, params_s, cfg_s = _params_pair(cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.num_image_tokens, cfg.d_model))
+    np.testing.assert_allclose(
+        np.asarray(T.forward(params, cfg, batch)),
+        np.asarray(T.forward(params_s, cfg_s, batch)), atol=1e-4)
+
+
+def test_scan_period():
+    assert get_smoke_config("yi-6b").scan_period() == 1
+    assert get_smoke_config("xlstm-350m").scan_period() == 2
+    assert get_smoke_config("llama-3.2-vision-11b").scan_period() == 2
+    from repro.configs import get_config
+    assert get_config("xlstm-350m").scan_period() == 4
+    assert get_config("llama-3.2-vision-11b").scan_period() == 5
+
+
+def test_flash_vjp_matches_dense_grads():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 1024, 2, 64))
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64))
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64))
+    gf = jax.grad(lambda a, b, c: jnp.sum(
+        blocked_attention(a, b, c, causal=True) ** 2),
+        argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(lambda a, b, c: jnp.sum(
+        dense_attention(a, b, c, causal=True) ** 2),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_grouped_decode_matches_baseline():
+    cfg = get_smoke_config("yi-6b")
+    params = T.init_params(cfg, jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 17), 0,
+                              cfg.vocab_size)
+    _, c0 = T.prefill(params, cfg, {"tokens": toks[:, :-1]}, capacity=32)
+    d0, _ = T.decode_step(params, cfg, toks[:, -1:], c0)
+    cfg_g = cfg.replace(grouped_decode=True)
+    _, c1 = T.prefill(params, cfg_g, {"tokens": toks[:, :-1]}, capacity=32)
+    d1, _ = T.decode_step(params, cfg_g, toks[:, -1:], c1)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-5)
+
+
+def test_int8_kv_cache_close_and_compact():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(6))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 17), 0,
+                              cfg.vocab_size)
+    _, c0 = T.prefill(params, cfg, {"tokens": toks[:, :-1]}, capacity=32)
+    d0, _ = T.decode_step(params, cfg, toks[:, -1:], c0)
+    cfg_q = cfg.replace(kv_cache_dtype="int8")
+    _, c1 = T.prefill(params, cfg_q, {"tokens": toks[:, :-1]}, capacity=32)
+    assert c1["layers"][0]["k"].dtype == jnp.int8
+    assert "k_scale" in c1["layers"][0]
+    d1, _ = T.decode_step(params, cfg_q, toks[:, -1:], c1)
+    rel = np.abs(np.asarray(d1 - d0)).max() / np.abs(np.asarray(d0)).max()
+    assert rel < 0.05, rel
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_smoke_config("llama3.2-1b")
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(8), (8, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(9), (8, 32), 0,
+                                          cfg.vocab_size)}
+    s0 = init_state(cfg, jax.random.PRNGKey(10))
+    s1 = init_state(cfg, jax.random.PRNGKey(10))
+    full = make_train_step(cfg, AdamWConfig())
+    micro = make_train_step(cfg, AdamWConfig(microbatch=4))
+    ns0, m0 = jax.jit(full)(s0, batch)
+    ns1, m1 = jax.jit(micro)(s1, batch)
+    # same gradients (up to accumulation-order fp noise) -> same params
+    for a, b in zip(jax.tree.leaves(ns0.params), jax.tree.leaves(ns1.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+    assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-2
+
+
+def test_zero1_specs_shard_moments_only():
+    from repro.parallel.sharding import opt_state_specs, param_specs
+
+    class FakeMesh:
+        def __init__(self, **axes):
+            self.shape = dict(axes)
+
+    mesh = FakeMesh(data=16, model=16)
+    from repro.configs import get_config
+    cfg = get_config("granite-34b")
+    shapes = jax.eval_shape(lambda: T.init_params(cfg,
+                                                  jax.random.PRNGKey(0)))
+    base = opt_state_specs(mesh, shapes, cfg)
+    z1 = opt_state_specs(mesh, shapes, cfg, zero1=True)
+    # moments gain a data axis on some dim; param specs untouched
+    wq_base = base["mu"]["layers"][0]["attn"]["wq"]
+    wq_z1 = z1["mu"]["layers"][0]["attn"]["wq"]
+    assert "data" not in jax.tree.leaves(wq_base, is_leaf=lambda x: True)
+    flat = [a for dim in tuple(wq_z1)
+            for a in (dim if isinstance(dim, tuple) else (dim,))]
+    assert "data" in flat
+    p_specs = param_specs(mesh, shapes, cfg)
+    assert "data" not in str(p_specs["layers"][0]["attn"]["wq"])

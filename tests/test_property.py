@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost import CostModel
+from repro.core.latency import (GPUSpec, LMShape, minions_latency_ratio,
+                                prop_c1_bound)
+from repro.core.tasks import score_answer
+from repro.core.types import JobOutput, Usage, extract_json
+from repro.core.filtering import filter_outputs
+from repro.core.chunking import chunk_by_chars, chunk_on_multiple_pages
+from repro.models.layers import blocked_attention, dense_attention
+from repro.serving.tokenizer import ByteTokenizer
+
+cm = CostModel()
+
+
+# --------------------------------------------------------------------------
+# cost model
+# --------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10**8), st.integers(0, 10**8),
+       st.integers(0, 10**8), st.integers(0, 10**8))
+def test_cost_additive_and_monotone(p1, d1, p2, d2):
+    u1, u2 = Usage(p1, d1), Usage(p2, d2)
+    total = Usage(p1 + p2, d1 + d2)
+    assert abs(cm.usd(total) - (cm.usd(u1) + cm.usd(u2))) < 1e-9
+    assert cm.usd(Usage(p1 + 1, d1)) >= cm.usd(u1)
+
+
+@given(st.integers(1, 10**7))
+def test_decode_tokens_cost_alpha_times_more(n):
+    assert abs(cm.usd(Usage(0, n)) / cm.usd(Usage(n, 0))
+               - cm.prices.alpha) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# Proposition C.1: the exact latency model never exceeds the bound
+# --------------------------------------------------------------------------
+
+
+@given(
+    st.integers(10_000, 1_000_000),          # n context tokens
+    st.integers(1, 64),                      # c chunks
+    st.integers(1, 16),                      # k tasks
+    st.integers(1, 8),                       # s samples
+    st.floats(0.05, 1.0),                    # p keep fraction
+    st.floats(0.01, 0.99),                   # a = upload fraction of n
+)
+@settings(max_examples=200)
+def test_prop_c1_bound_holds(n, c, k, s, p, a):
+    local = LMShape("l", 32, 4096)
+    remote = LMShape("r", 126, 16384)
+    lhw = GPUSpec("lhw", 160e12, 1e12)
+    rhw = GPUSpec("rhw", 8000e12, 26.8e12)
+    n_out_local = max(1, int(a * n / (p * c * k * s)))
+    a_eff = n_out_local * p * c * k * s / n
+    if a_eff >= 1.0:  # proposition assumes a < 1
+        return
+    ratio = minions_latency_ratio(local, remote, lhw, rhw, n=n, c=c, k=k,
+                                  s=s, p_keep=p, n_out_local=n_out_local,
+                                  n_out_remote=100)
+    bound = prop_c1_bound(local, remote, lhw, rhw, a=a_eff)
+    assert ratio < bound + 1e-6, (ratio, bound)
+
+
+# --------------------------------------------------------------------------
+# tokenizer / chunking / scoring
+# --------------------------------------------------------------------------
+
+
+@given(st.text(max_size=500))
+def test_tokenizer_roundtrip(s):
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(s)) == s
+
+
+@given(st.text(min_size=1, max_size=3000), st.integers(1, 500))
+def test_chunk_by_chars_partition(doc, n):
+    chunks = chunk_by_chars(doc, n)
+    assert "".join(chunks) == doc
+    assert all(len(c) <= n for c in chunks)
+
+
+@given(st.integers(1, 30), st.integers(1, 10))
+def test_chunk_on_pages_covers_all_pages(n_pages, per_chunk):
+    doc = "\f".join(f"page-{i}" for i in range(n_pages))
+    chunks = chunk_on_multiple_pages(doc, per_chunk)
+    joined = "\f".join(chunks)
+    for i in range(n_pages):
+        assert f"page-{i}" in joined
+
+
+@given(st.floats(-1e6, 1e6, allow_nan=False))
+def test_score_answer_accepts_own_value(x):
+    expected = f"{x:.3f}"
+    assert score_answer(f"The answer is {expected}.", expected)
+
+
+@given(st.floats(1.0, 1e6), st.floats(1.05, 2.0))
+def test_score_answer_rejects_far_values(x, factor):
+    assert not score_answer(f"{x * factor:.4f}", f"{x:.4f}")
+
+
+# --------------------------------------------------------------------------
+# filtering / JSON extraction
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.one_of(st.none(), st.text(max_size=8))),
+                max_size=40))
+def test_filter_never_keeps_abstains(items):
+    outs = [JobOutput(answer=a, job=None) if a is None or a
+            else JobOutput(answer=None) for _, a in items]
+    kept = filter_outputs(outs)
+    assert all(not o.abstained for o in kept)
+    assert len(kept) <= len(outs)
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=8),
+                       st.one_of(st.text(max_size=16), st.integers(),
+                                 st.none()), max_size=5),
+       st.text(max_size=40), st.text(max_size=40))
+def test_extract_json_finds_embedded_object(d, prefix, suffix):
+    import json
+    blob = prefix.replace("{", "").replace("}", "") + "\n```json\n" \
+        + json.dumps(d) + "\n```\n" + suffix.replace("{", "").replace(
+            "}", "")
+    got = extract_json(blob)
+    assert got == d or (not d and got in (None, {}))
+
+
+# --------------------------------------------------------------------------
+# blocked attention == dense attention (the long-context jnp path)
+# --------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([512, 1024]),
+       st.sampled_from([1, 2]), st.booleans(),
+       st.sampled_from([0, 256, 600]))
+@settings(max_examples=12, deadline=None)
+def test_blocked_attention_matches_dense(seed, s, h, causal, window):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    b, hd = 1, 32
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    blocked = blocked_attention(q, k, v, causal=causal, window=window)
+    dense = dense_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)

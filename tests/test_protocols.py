@@ -1,0 +1,128 @@
+"""Protocol behaviour: Minion / MinionS / baselines with calibrated
+simulated clients (deterministic seeds)."""
+import pytest
+
+from repro.core import (CostModel, MinionConfig, MinionSConfig, Usage,
+                        run_local_only, run_minion, run_minions, run_rag,
+                        run_remote_only)
+from repro.core.simulated import ScriptedRemote, SimulatedLocal
+from repro.core.tasks import make_dataset, make_task, score_answer
+
+TASKS = make_dataset(16, seed=11, n_pages=30)
+LOCAL = SimulatedLocal("llama-8b", seed=0)
+REMOTE = ScriptedRemote(seed=0)
+CM = CostModel()
+
+
+def _eval(runner):
+    acc, usage = 0, Usage()
+    for t in TASKS:
+        r = runner(t)
+        acc += score_answer(r.answer, t.answer)
+        usage += r.remote_usage
+    return acc / len(TASKS), CM.usd(usage) / len(TASKS)
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {
+        "remote": _eval(lambda t: run_remote_only(REMOTE, t.context,
+                                                  t.query)),
+        "local": _eval(lambda t: run_local_only(LOCAL, t.context, t.query)),
+        "minion": _eval(lambda t: run_minion(LOCAL, REMOTE, t.context,
+                                             t.query, MinionConfig())),
+        "minions": _eval(lambda t: run_minions(LOCAL, REMOTE, t.context,
+                                               t.query, MinionSConfig())),
+    }
+
+
+def test_accuracy_ordering(results):
+    """Paper Fig 2: local-only < minion < minions <= remote-only (approx)."""
+    assert results["local"][0] < results["minions"][0]
+    assert results["minion"][0] <= results["minions"][0] + 0.05
+    assert results["minions"][0] >= 0.85 * results["remote"][0]
+
+
+def test_cost_ordering(results):
+    """Remote-only most expensive; local free; protocols in between."""
+    assert results["local"][1] == 0.0
+    assert 0 < results["minion"][1] < results["remote"][1]
+    assert 0 < results["minions"][1] < results["remote"][1]
+    assert results["minion"][1] < results["minions"][1]
+
+
+def test_minions_cost_reduction_at_least_3x(results):
+    assert results["remote"][1] / results["minions"][1] > 3.0
+
+
+def test_minion_cost_reduction_larger_than_minions(results):
+    assert (results["remote"][1] / results["minion"][1]
+            > results["remote"][1] / results["minions"][1])
+
+
+def test_minions_protocol_mechanics():
+    t = make_task(123, n_pages=20, kind="compute")
+    r = run_minions(LOCAL, REMOTE, t.context, t.query, MinionSConfig())
+    assert r.num_rounds >= 1
+    assert r.rounds[0].num_jobs > 0
+    assert r.rounds[0].num_kept <= r.rounds[0].num_jobs
+    assert r.local_prefill_tokens > 0       # local did the reading
+    assert r.remote_usage.prefill_tokens < 5000  # remote never saw the doc
+    assert any(e["role"] == "remote/decompose" for e in r.transcript)
+
+
+def test_minions_remote_never_reads_context():
+    """The remote's prompts must not contain document text."""
+    t = make_task(77, n_pages=10, kind="extract")
+    marker = t.context[:200]
+    r = run_minions(LOCAL, REMOTE, t.context, t.query, MinionSConfig())
+    from repro.serving.tokenizer import approx_tokens
+    assert r.remote_usage.prefill_tokens < approx_tokens(t.context)
+
+
+def test_more_rounds_never_hurt_minion():
+    accs = []
+    for rounds in (1, 3):
+        acc, _ = _eval(lambda t: run_minion(
+            LOCAL, REMOTE, t.context, t.query,
+            MinionConfig(max_rounds=rounds)))
+        accs.append(acc)
+    assert accs[1] >= accs[0] - 0.07
+
+
+def test_samples_knob_increases_cost():
+    t = make_task(5, n_pages=10)
+    r1 = run_minions(LOCAL, REMOTE, t.context, t.query,
+                     MinionSConfig(num_samples=1))
+    r4 = run_minions(LOCAL, REMOTE, t.context, t.query,
+                     MinionSConfig(num_samples=4))
+    assert r4.local_decode_tokens > r1.local_decode_tokens
+
+
+def test_rag_works_on_extraction():
+    tasks = make_dataset(8, seed=3, n_pages=20, compute_frac=0.0)
+    acc, cost = 0, Usage()
+    for t in tasks:
+        r = run_rag(REMOTE, t.context, t.query, top_k=10)
+        acc += score_answer(r.answer, t.answer)
+        cost += r.remote_usage
+    assert acc / len(tasks) >= 0.5
+    base = _eval(lambda t: run_remote_only(REMOTE, t.context, t.query))[1]
+    assert CM.usd(cost) / len(tasks) < base
+
+
+def test_weaker_local_model_worse_minions():
+    weak = SimulatedLocal("llama-1b", seed=0)
+    strong_acc, _ = _eval(lambda t: run_minions(
+        LOCAL, REMOTE, t.context, t.query, MinionSConfig()))
+    weak_acc, _ = _eval(lambda t: run_minions(
+        weak, REMOTE, t.context, t.query, MinionSConfig()))
+    assert weak_acc < strong_acc
+
+
+def test_scratchpad_carries_found_facts():
+    t = make_task(42, n_pages=30, kind="compute")
+    r = run_minions(LOCAL, REMOTE, t.context, t.query,
+                    MinionSConfig(max_rounds=3,
+                                  context_strategy="scratchpad"))
+    assert r.answer is not None

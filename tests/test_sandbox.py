@@ -1,0 +1,82 @@
+import pytest
+
+from repro.core.chunking import PAGE_SEP
+from repro.core.sandbox import SandboxError, run_decompose_code
+from repro.core.types import JobManifest
+
+DOC = PAGE_SEP.join(f"page {i}: revenue was ${i}m." for i in range(10))
+
+GOOD = """
+def prepare_jobs(context, last_jobs=None):
+    jobs = []
+    chunks = chunk_on_multiple_pages(context, pages_per_chunk=2)
+    for ci, ch in enumerate(chunks):
+        jobs.append(JobManifest(chunk_id=str(ci), task_id=0, chunk=ch,
+                                task="Extract revenue."))
+    return jobs
+"""
+
+
+def test_good_code_produces_jobs():
+    jobs = run_decompose_code(GOOD, DOC)
+    assert len(jobs) == 5
+    assert all(isinstance(j, JobManifest) for j in jobs)
+    assert "page 2" in jobs[1].chunk
+
+
+def test_last_jobs_are_passed():
+    code = """
+def prepare_jobs(context, last_jobs=None):
+    n = len(last_jobs) if last_jobs else 1
+    return [JobManifest(chunk_id=str(i), task_id=0, chunk="c", task="t")
+            for i in range(n + 1)]
+"""
+    first = run_decompose_code(code, DOC)
+    second = run_decompose_code(code, DOC, last_jobs=first)
+    assert len(first) == 2 and len(second) == 3
+
+
+@pytest.mark.parametrize("bad", [
+    "import os\ndef prepare_jobs(c, l=None): return []",
+    "def prepare_jobs(c, l=None): return open('/etc/passwd')",
+    "def prepare_jobs(c, l=None): return __import__('os')",
+    "def prepare_jobs(c, l=None): return c.__class__",
+])
+def test_forbidden_constructs_rejected(bad):
+    with pytest.raises(SandboxError):
+        run_decompose_code(bad, DOC)
+
+
+def test_zero_jobs_is_error():
+    with pytest.raises(SandboxError):
+        run_decompose_code("def prepare_jobs(c, l=None): return []", DOC)
+
+
+def test_non_list_return_is_error():
+    with pytest.raises(SandboxError):
+        run_decompose_code("def prepare_jobs(c, l=None): return 'x'", DOC)
+
+
+def test_runtime_error_is_wrapped():
+    with pytest.raises(SandboxError):
+        run_decompose_code(
+            "def prepare_jobs(c, l=None): return [1/0]", DOC)
+
+
+def test_job_cap_enforced():
+    code = """
+def prepare_jobs(context, last_jobs=None):
+    return [JobManifest(chunk_id=str(i), task_id=0, chunk="c", task="t")
+            for i in range(10000)]
+"""
+    jobs = run_decompose_code(code, DOC, max_jobs=64)
+    assert len(jobs) == 64
+
+
+def test_dict_jobs_coerced():
+    code = """
+def prepare_jobs(context, last_jobs=None):
+    return [{"chunk_id": "0", "task_id": 1, "chunk": "c", "task": "t"}]
+"""
+    jobs = run_decompose_code(code, DOC)
+    assert jobs[0].task_id == 1

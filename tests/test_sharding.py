@@ -1,0 +1,119 @@
+"""Sharding-rule invariants (host mesh; the 512-device production meshes
+are exercised by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.parallel import batch_specs, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Axis-size stand-in so divisibility rules can be tested without 512
+    real devices."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+PROD = FakeMesh(data=16, model=16)
+PROD_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def _leaf_specs(tree):
+    return [x for x in jax.tree.leaves(
+        tree, is_leaf=lambda s: isinstance(s, P)) if isinstance(x, P)]
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [PROD, PROD_MP], ids=["16x16", "2x16x16"])
+def test_param_specs_divisible(arch, mesh):
+    """Every sharded dim must divide by its mesh axes product."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(mesh, shapes, cfg)
+
+    def check(leaf, spec):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (leaf.shape, spec)
+
+    jax.tree.map(check, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "granite-34b", "qwen1.5-32b",
+                                  "whisper-small", "olmoe-1b-7b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768))
+    specs = cache_specs(PROD, cfg, cache)
+
+    def check(leaf, spec):
+        if not hasattr(leaf, "shape") or not leaf.shape:
+            return
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([PROD.shape[a] for a in axes]))
+            assert dim % size == 0, (leaf.shape, spec)
+
+    jax.tree.map(check, cache, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_moe_experts_sharded_on_model():
+    cfg = get_config("olmoe-1b-7b")
+    shapes = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(PROD, shapes, cfg)
+    moe_spec = specs["layers"][0]["moe"]["up"]
+    assert moe_spec[0] == "model"  # expert axis
+
+
+def test_non_divisible_heads_replicated_in_train_mode():
+    cfg = get_config("qwen1.5-32b")  # 40 heads on 16-way model axis
+    shapes = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(PROD, shapes, cfg)
+    assert specs["layers"][0]["attn"]["wq"] == P(None, None)
+    # but the MLP still tensor-parallel
+    assert specs["layers"][0]["mlp"]["gate"][1] == "model"
+
+
+def test_decode_mode_flat_shards_attention():
+    cfg = get_config("qwen1.5-32b")
+    shapes = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(PROD, shapes, cfg, decode=True)
+    assert specs["layers"][0]["attn"]["wq"] == P(None, "model")
+
+
+def test_jit_with_shardings_on_host_mesh():
+    """The same spec pipeline executes a real sharded train step."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import opt_state_specs, to_shardings
+    from repro.training import AdamWConfig
+    from repro.training.train_loop import (TrainState, init_state,
+                                           make_train_step)
+    cfg = get_smoke_config("llama3.2-1b")
+    mesh = make_host_mesh(1)
+    with mesh:
+        state = init_state(cfg, jax.random.PRNGKey(0))
+        sspec = TrainState(param_specs(mesh, state.params, cfg),
+                           opt_state_specs(mesh, state.params, cfg))
+        sshard = to_shardings(mesh, sspec)
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        bshard = to_shardings(mesh, batch_specs(mesh, cfg, batch))
+        fn = jax.jit(make_train_step(cfg, AdamWConfig()),
+                     in_shardings=(sshard, bshard))
+        new_state, metrics = fn(state, batch)
+        assert float(metrics["loss"]) > 0
