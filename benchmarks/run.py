@@ -267,6 +267,53 @@ def kernels(n_tasks: int):
 
 
 # ===========================================================================
+# Engine: fused decode throughput + prefill padding waste
+# ===========================================================================
+
+
+def engine_bench(n_tasks: int):
+    """Decode tokens/sec through the fused while_loop and prefill padding
+    waste with/without job packing; writes the BENCH_engine.json baseline
+    that later PRs diff against."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as model_lib
+    from repro.serving import InferenceEngine
+
+    cfg = get_smoke_config("llama3.2-1b")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    # ragged MinionS-style worker batch: many short jobs, one long outlier
+    prompts = [f"worker job {i}: extract the figure from: " + "data " * (4 * (i % 5))
+               for i in range(12)]
+    max_new = 32
+
+    baseline = {}
+    for packed in (False, True):
+        eng = InferenceEngine(cfg, params, max_seq_len=1024,
+                              pack_jobs=packed)
+        eng.generate_batch(prompts, max_new_tokens=max_new)  # warm/compile
+        d0, t0 = eng.usage.decode_tokens, time.time()
+        eng.generate_batch(prompts, max_new_tokens=max_new)
+        dt = time.time() - t0
+        decoded = eng.usage.decode_tokens - d0
+        tok_s = decoded / max(dt, 1e-9)
+        pad_frac = 1.0 - eng.usage.prefill_tokens / max(
+            eng.usage.prefill_slots, 1)
+        transfers = eng.usage.host_transfers / eng.usage.calls
+        mode = "packed" if packed else "unpacked"
+        emit(f"engine/decode_{mode}", dt * 1e6,
+             f"tok_per_s={tok_s:.1f};pad_frac={pad_frac:.3f};"
+             f"transfers_per_call={transfers:.1f}")
+        baseline[mode] = {"decode_tok_per_s": round(tok_s, 1),
+                          "prefill_pad_frac": round(pad_frac, 4),
+                          "host_transfers_per_call": transfers,
+                          "decode_tokens": int(decoded)}
+    with open("BENCH_engine.json", "w") as f:
+        json.dump({"config": cfg.name, "n_jobs": len(prompts),
+                   "max_new_tokens": max_new, **baseline}, f, indent=2)
+        f.write("\n")
+
+
+# ===========================================================================
 # Roofline summary (reads the dry-run artifacts)
 # ===========================================================================
 
@@ -297,6 +344,7 @@ BENCHMARKS: Dict[str, Callable] = {
     "fig8_rag": fig8_rag,
     "appendix_c": appendix_c_latency,
     "kernels": kernels,
+    "engine": engine_bench,
     "roofline": roofline_summary,
 }
 

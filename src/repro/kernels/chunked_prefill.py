@@ -93,13 +93,22 @@ def chunked_prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                               segment_ids: jnp.ndarray, *,
                               block_q: int = 128, block_k: int = 128,
                               interpret: bool = True) -> jnp.ndarray:
-    """q,k,v: (B, S, H, hd) with kv already head-repeated; segment_ids (B,S).
+    """q: (B, S, H, hd); k,v: (B, S, Hkv, hd) at NATIVE kv head count;
+    segment_ids (B,S).
+
+    GQA is handled by the K/V index maps: each of the ``H`` query heads
+    reads the (1, block_k, 1, hd) tile of its kv head ``hh // group``
+    directly from HBM — K/V are never materialised head-repeated, so HBM
+    traffic and footprint stay at the Hkv head count.
 
     S must be a multiple of the block sizes (ops.py pads).  hd should be a
     multiple of 128 for MXU alignment on real hardware; interpret mode
     accepts anything.
     """
     b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
     assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
     nq, nk = s // block_q, s // block_k
     sm_scale = 1.0 / math.sqrt(hd)
@@ -126,9 +135,9 @@ def chunked_prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pl.BlockSpec((1, block_q, 1, hd),
                          lambda bb, hh, qi, kj: (bb, qi, hh, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
-                         lambda bb, hh, qi, kj: (bb, kj, hh, 0)),
+                         lambda bb, hh, qi, kj: (bb, kj, hh // group, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
-                         lambda bb, hh, qi, kj: (bb, kj, hh, 0)),
+                         lambda bb, hh, qi, kj: (bb, kj, hh // group, 0)),
             seg_spec(block_q, True),
             seg_spec(block_k, False),
         ],

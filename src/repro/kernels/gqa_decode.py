@@ -25,7 +25,7 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _kernel(valid_ref, q_ref, k_ref, v_ref, out_ref,
+def _kernel(start_ref, valid_ref, q_ref, k_ref, v_ref, out_ref,
             acc_ref, m_ref, l_ref, *, block_k: int, sm_scale: float,
             num_kv_blocks: int, group: int):
     bb = pl.program_id(0)
@@ -37,8 +37,12 @@ def _kernel(valid_ref, q_ref, k_ref, v_ref, out_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
+    start = start_ref[bb]
     valid = valid_ref[bb]
-    live = kj * block_k < valid
+    # skip tiles entirely before the row's first valid slot (left-padding)
+    # or entirely at/after its write frontier
+    live = jnp.logical_and(kj * block_k < valid,
+                           (kj + 1) * block_k > start)
 
     @pl.when(live)
     def _compute():
@@ -49,7 +53,7 @@ def _kernel(valid_ref, q_ref, k_ref, v_ref, out_ref,
                                 preferred_element_type=jnp.float32)  # (G, bk)
         kpos = kj * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (q.shape[0], block_k), 1)
-        s = jnp.where(kpos < valid, s, NEG_INF)
+        s = jnp.where((kpos >= start) & (kpos < valid), s, NEG_INF)
 
         m_prev = m_ref[:, 0]
         l_prev = l_ref[:, 0]
@@ -71,10 +75,16 @@ def _kernel(valid_ref, q_ref, k_ref, v_ref, out_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                         v_cache: jnp.ndarray, valid_len: jnp.ndarray, *,
+                         v_cache: jnp.ndarray, valid_len: jnp.ndarray,
+                         start: jnp.ndarray = None, *,
                          block_k: int = 256,
                          interpret: bool = True) -> jnp.ndarray:
     """q: (B, H, hd); caches: (B, L, Hkv, hd); valid_len: (B,) int32.
+
+    ``start`` (B,) int32 marks the first valid cache slot per row — slots
+    in [start, valid_len) attend, everything else (left-padding from the
+    engine's ragged batches, unwritten tail) is masked and fully-dead KV
+    tiles are skipped.  Defaults to 0 (all slots below valid_len valid).
 
     Returns (B, H, hd).  L must be a multiple of block_k (ops.py pads).
     """
@@ -85,6 +95,8 @@ def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     assert l % block_k == 0, (l, block_k)
     nk = l // block_k
     sm_scale = 1.0 / math.sqrt(hd)
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
 
     # (B, H, hd) -> (B, Hkv, G, hd) so one grid step owns a whole q group
     qg = q.reshape(b, hkv, group, hd)
@@ -100,18 +112,19 @@ def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, hkv, nk),
         in_specs=[
             pl.BlockSpec((1, 1, group, hd),
-                         lambda bb, kh, kj, valid: (bb, kh, 0, 0)),
+                         lambda bb, kh, kj, start, valid: (bb, kh, 0, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
-                         lambda bb, kh, kj, valid: (bb, kj, kh, 0)),
+                         lambda bb, kh, kj, start, valid: (bb, kj, kh, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
-                         lambda bb, kh, kj, valid: (bb, kj, kh, 0)),
+                         lambda bb, kh, kj, start, valid: (bb, kj, kh, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, group, hd),
-                               lambda bb, kh, kj, valid: (bb, kh, 0, 0)),
+                               lambda bb, kh, kj, start, valid:
+                               (bb, kh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((group, hd), jnp.float32),
             pltpu.VMEM((group, LANES), jnp.float32),
@@ -125,5 +138,5 @@ def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
         compiler_params=compiler_params,
         interpret=interpret,
-    )(valid_len, qg, k_cache, v_cache)
+    )(start, valid_len, qg, k_cache, v_cache)
     return out.reshape(b, h, hd)

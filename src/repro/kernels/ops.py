@@ -24,16 +24,18 @@ def chunked_prefill(q, k, v, segment_ids, *, block_q: int = 128,
                     block_k: int = 128, interpret=None):
     """Block-diagonal causal flash attention (B,S,H,hd)x(B,S) -> (B,S,H,hd).
 
-    kv may have fewer heads (GQA) — repeated here.  Sequence padded to the
-    block size with segment id -1 (matches nothing real).
+    kv may have fewer heads (GQA) — handled natively by the kernel's K/V
+    index maps, so K/V are never materialised head-repeated (HBM traffic
+    and memory stay at the kv head count instead of growing by q_per_kv).
+    Sequence padded to the block size with segment id -1 (matches nothing
+    real).  This is the engine's packed-prefill kernel: distinct segment
+    ids per packed job give exact job isolation and the kernel skips KV
+    tiles whose segment range cannot intersect the query tile's.
     """
     if interpret is None:
         interpret = not _on_tpu()
     b, s, h, hd = q.shape
-    if k.shape[2] != h:
-        rep = h // k.shape[2]
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
+    assert h % k.shape[2] == 0, (h, k.shape[2])
     blk = max(block_q, block_k)
     pad = (-s) % blk
     if pad:
@@ -48,10 +50,15 @@ def chunked_prefill(q, k, v, segment_ids, *, block_q: int = 128,
     return out[:, :s]
 
 
-def gqa_decode(q, k_cache, v_cache, valid_len, *, block_k: int = 256,
-               interpret=None):
+def gqa_decode(q, k_cache, v_cache, valid_len, *, start=None,
+               block_k: int = 256, interpret=None):
     """GQA decode attention.  q: (B,H,hd) or (B,1,H,hd); caches
-    (B,L,Hkv,hd) NOT head-repeated; valid_len scalar or (B,)."""
+    (B,L,Hkv,hd) NOT head-repeated; valid_len scalar or (B,).
+
+    ``start`` (scalar or (B,), optional) is the first valid cache slot per
+    row: the engine's left-padded ragged rows mark their pad prefix invalid
+    by passing the prompt's start offset, and the kernel skips KV tiles
+    entirely outside [start, valid_len)."""
     if interpret is None:
         interpret = not _on_tpu()
     squeeze = False
@@ -61,11 +68,15 @@ def gqa_decode(q, k_cache, v_cache, valid_len, *, block_k: int = 256,
     b, h, hd = q.shape
     l = k_cache.shape[1]
     valid_len = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+    else:
+        start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
     pad = (-l) % block_k
     if pad:
         zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
         k_cache = jnp.pad(k_cache, zpad)
         v_cache = jnp.pad(v_cache, zpad)
-    out = gqa_decode_attention(q, k_cache, v_cache, valid_len,
+    out = gqa_decode_attention(q, k_cache, v_cache, valid_len, start,
                                block_k=block_k, interpret=interpret)
     return out[:, None] if squeeze else out

@@ -33,11 +33,14 @@ def chunked_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def gqa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                   valid_len: jnp.ndarray) -> jnp.ndarray:
+                   valid_len: jnp.ndarray,
+                   start: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Single-token GQA decode attention against a (ring-buffer) cache.
 
     q: (B, H, hd); caches: (B, L, Hkv, hd); valid_len: (B,) int32 count of
-    valid slots (ring buffers make ordering irrelevant).  Returns (B, H, hd).
+    valid slots (ring buffers make ordering irrelevant).  ``start`` (B,)
+    optionally marks the first valid slot per row (left-padded caches).
+    Returns (B, H, hd).
     """
     b, h, hd = q.shape
     _, l, hkv, _ = k_cache.shape
@@ -47,6 +50,8 @@ def gqa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     vc = v_cache.astype(jnp.float32)
     scores = jnp.einsum("bkgd,blkd->bkgl", qg, kc) / math.sqrt(hd)
     mask = jnp.arange(l)[None, :] < valid_len[:, None]          # (B, L)
+    if start is not None:
+        mask &= jnp.arange(l)[None, :] >= start[:, None]
     scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgl,blkd->bkgd", probs, vc)

@@ -63,6 +63,12 @@ class ModelConfig:
     scan_layers: bool = False  # lax.scan over stacked layer units (compile
                                # time ~O(1) in depth; MaxText-style)
     grouped_decode: bool = False  # GQA decode without repeat_kv (§Perf)
+    attention_backend: str = "reference"  # "reference" (jnp) | "pallas":
+                               # dispatch self-attention to the fused
+                               # kernels.chunked_prefill / kernels.gqa_decode
+                               # Pallas kernels on supported shapes (full
+                               # causal attention, no sliding window);
+                               # unsupported layers fall back to reference
     kv_cache_dtype: str = ""   # "" -> activation dtype; "int8" -> quantized
                                # KV cache with per-(slot, head) scales
 

@@ -12,6 +12,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import kernels as pallas_kernels
+
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from .config import ModelConfig
@@ -23,6 +25,19 @@ from .layers import (apply_rope, attention, decode_attention,
 
 Params = Dict[str, Any]
 Cache = Dict[str, Any]
+
+
+def _pallas_attention_ok(cfg: ModelConfig) -> bool:
+    """Whether self-attention may dispatch to the fused Pallas kernels.
+
+    ``attention_backend="pallas"`` routes prefill to kernels.chunked_prefill
+    (block-diagonal flash attention, native GQA) and decode to
+    kernels.gqa_decode (grouped heads, no repeat_kv).  The kernels cover
+    full causal attention only, so sliding-window configs fall back to the
+    jnp reference path; the kernels define no VJP, so training configs must
+    keep the default "reference" backend.
+    """
+    return cfg.attention_backend == "pallas" and not cfg.sliding_window
 
 
 # ===========================================================================
@@ -131,11 +146,16 @@ def _self_attention(lp: Params, cfg: ModelConfig, x, positions, segment_ids):
     q, k, v = qkv_project(lp["attn"], x, cfg.num_heads, cfg.num_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    kr = repeat_kv(k, cfg.q_per_kv)
-    vr = repeat_kv(v, cfg.q_per_kv)
-    out = attention(q, kr, vr, causal=True, window=cfg.sliding_window,
-                    segment_ids=segment_ids)
     b, s = x.shape[:2]
+    if _pallas_attention_ok(cfg):
+        seg = (segment_ids if segment_ids is not None
+               else jnp.zeros((b, s), jnp.int32))
+        out = pallas_kernels.chunked_prefill(q, k, v, seg)
+    else:
+        kr = repeat_kv(k, cfg.q_per_kv)
+        vr = repeat_kv(v, cfg.q_per_kv)
+        out = attention(q, kr, vr, causal=True, window=cfg.sliding_window,
+                        segment_ids=segment_ids)
     out = out.reshape(b, s, cfg.num_heads * hd) @ lp["attn"]["wo"]
     return out, (k, v)
 
@@ -293,6 +313,9 @@ def _lm_head(params, x):
     return x @ params["embed"].T
 
 
+lm_head = _lm_head  # public: engine reads logits at packed-job positions
+
+
 def _hybrid_forward(lp, cfg, h, positions, segment_ids):
     """Hymba: parallel attention + mamba heads, head-normed and averaged."""
     hd = cfg.resolved_head_dim
@@ -407,14 +430,24 @@ def _cache_write(buf, new, pos):
 
 
 def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
-            capacity: int) -> Tuple[jnp.ndarray, Cache]:
+            capacity: int, return_hidden: bool = False):
     """Run the full prompt, returning last-position logits and a primed
-    cache positioned at ``seq_len``."""
+    cache positioned at ``seq_len``.
+
+    ``batch["positions"]`` optionally overrides the RoPE positions (used by
+    the engine's packed prefill, where several jobs share one row and each
+    job carries the positions of its eventual decode-row layout).  With
+    ``return_hidden`` (static under jit) the post-final-norm hidden states
+    (B, S, d) are returned as a third output so callers can read logits at
+    arbitrary positions — e.g. the last prompt token of every packed job —
+    without materialising (B, S, V) logits."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     cache = init_cache(cfg, b, capacity)
     segment_ids = batch.get("segment_ids")
-    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
 
     memory = None
     if cfg.is_encdec:
@@ -456,6 +489,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     else:
         cache["slot_mask"] = _cache_write(
             cache["slot_mask"], jnp.ones((b, s), bool), 0)
+    if return_hidden:
+        return logits, cache, x
     return logits, cache
 
 
@@ -506,8 +541,12 @@ def _prefill_layer(lp: Params, lc: Cache, x, cfg: ModelConfig, kind: str,
 
 
 def _decode_layer(lp: Params, lc: Cache, x, cfg: ModelConfig, kind: str,
-                  positions, pos, slot_mask):
-    """One decoder block during decode; returns (x, updated layer cache)."""
+                  positions, pos, slot_mask, pallas_window=None):
+    """One decoder block during decode; returns (x, updated layer cache).
+
+    ``pallas_window`` is the layer-invariant (start, contiguous) analysis
+    of ``slot_mask`` that decode_step computes once when the Pallas
+    backend is active; None means use the jnp reference paths."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     lc = dict(lc)
@@ -521,7 +560,24 @@ def _decode_layer(lp: Params, lc: Cache, x, cfg: ModelConfig, kind: str,
         _write_kv(lc, "v", v, pos, cfg)
         kc = _read_kv(lc, "k", cfg)
         vc = _read_kv(lc, "v", cfg)
-        if cfg.grouped_decode:
+        if pallas_window is not None:
+            # the kernel masks a per-row [start, valid_len) window, which
+            # covers slot_mask exactly when each row has one contiguous
+            # valid region (the engine's left-padded caches: pad prefix
+            # invalid, slots [start, pos] written).  A mask with holes —
+            # e.g. a future continuous-batching scheduler reusing freed
+            # rows — falls back on device to the mask-honoring reference
+            # path instead of silently attending to stale KV.
+            start, contiguous = pallas_window
+            attn_out = jax.lax.cond(
+                contiguous,
+                lambda args: pallas_kernels.gqa_decode(
+                    args[0], args[1], args[2], pos + 1, start=start),
+                lambda args: decode_attention_grouped(
+                    args[0], args[1], args[2], pos + 1,
+                    slot_mask=slot_mask),
+                (q, kc, vc))
+        elif cfg.grouped_decode:
             attn_out = decode_attention_grouped(
                 q, kc, vc, pos + 1, window=cfg.sliding_window,
                 slot_mask=slot_mask)
@@ -575,6 +631,15 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     slot_mask = _cache_write(cache["slot_mask"],
                              jnp.ones((b, 1), bool), pos)
 
+    pallas_window = None
+    if _pallas_attention_ok(cfg):
+        # layer-invariant: analyse the slot mask once per decode step
+        start = jnp.argmax(slot_mask, axis=1).astype(jnp.int32)
+        slots = jnp.arange(slot_mask.shape[1])[None, :]
+        contiguous = jnp.all(
+            slot_mask == ((slots >= start[:, None]) & (slots < pos + 1)))
+        pallas_window = (start, contiguous)
+
     if cfg.scan_layers:
         p = cfg.scan_period()
 
@@ -584,7 +649,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             for j in range(p):
                 xc, lc = _decode_layer(unit_params[j], unit_cache[j], xc,
                                        cfg, cfg.layer_kind(j), positions,
-                                       pos, slot_mask)
+                                       pos, slot_mask, pallas_window)
                 new_caches.append(lc)
             return xc, tuple(new_caches)
 
@@ -596,7 +661,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
         for i, lp in enumerate(params["layers"]):
             x, lc = _decode_layer(lp, cache["layers"][i], x, cfg,
                                   cfg.layer_kind(i), positions, pos,
-                                  slot_mask)
+                                  slot_mask, pallas_window)
             new_layers.append(lc)
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

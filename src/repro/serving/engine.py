@@ -1,9 +1,20 @@
 """Batched inference engine: the MinionS local execute substrate.
 
 Left-pads ragged prompt batches (segment ids mask the padding), runs a
-jitted prefill, then a jitted single-token decode loop with a ring-buffer
-KV/state cache.  Shapes are bucketed (next power of two) so repeated
-protocol rounds reuse compiled executables.
+jitted prefill, then ONE jitted ``lax.while_loop`` decode that fuses
+sampling, the per-row done mask (EOS + stop-sequence detection) and
+early exit entirely on device — results cross the host boundary once per
+``generate_batch`` call (O(1) transfers, not O(tokens)).  Shapes are
+bucketed (next power of two) so repeated protocol rounds reuse compiled
+executables.
+
+Job packing (the MinionS "execute locally in parallel" step): when the
+model supports it, several short worker jobs are packed into one prefill
+row with distinct segment ids — the block-diagonal attention mask keeps
+jobs isolated while padding slots stop burning FLOPs — and the primed KV
+cache is then scattered into one decode row per job.  RoPE positions are
+assigned from each job's eventual decode-row layout, so packed and
+unpacked prefill are numerically equivalent.
 """
 from __future__ import annotations
 
@@ -18,7 +29,7 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
-from .sampler import sample
+from .sampler import sample_traced
 from .tokenizer import ByteTokenizer
 
 
@@ -27,6 +38,12 @@ class EngineUsage:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     calls: int = 0
+    # padded prefill slots actually computed (real + padding): the gap to
+    # prefill_tokens is the bucket-padding waste packing exists to shrink
+    prefill_slots: int = 0
+    # host<->device result transfers; the fused decode loop keeps this O(1)
+    # per generate_batch call regardless of max_new_tokens
+    host_transfers: int = 0
 
     def add(self, prefill: int, decode: int):
         self.prefill_tokens += prefill
@@ -41,41 +58,167 @@ def _bucket(n: int, minimum: int = 64) -> int:
     return b
 
 
+def _pack_plan(lens: Sequence[int], row_cap: int) -> List[List[int]]:
+    """First-fit-decreasing bin packing of job lengths into rows of
+    ``row_cap`` token slots.  Returns job indices per row."""
+    order = sorted(range(len(lens)), key=lambda i: (-lens[i], i))
+    rows: List[List[int]] = []
+    space: List[int] = []
+    for i in order:
+        for r in range(len(rows)):
+            if space[r] >= lens[i]:
+                rows[r].append(i)
+                space[r] -= lens[i]
+                break
+        else:
+            rows.append([i])
+            space.append(row_cap - lens[i])
+    return rows
+
+
+def _fused_decode_loop(params, cfg: ModelConfig, first_logits, cache, key,
+                       stop_ids, limit, temperature, *, buf_len: int,
+                       greedy: bool):
+    """Device-bound decode: sample/EOS/stop/early-exit inside one
+    ``lax.while_loop``; returns (out_tokens (B, buf_len), n_decoded).
+
+    ``buf_len`` (static) sizes the output buffer — the engine buckets it so
+    nearby ``max_new_tokens`` values share one compiled executable — while
+    ``limit`` (traced, <= buf_len) is the exact token budget the loop
+    honours, so varying the budget costs no recompile.  ``temperature`` is
+    likewise traced (only the ``greedy`` structure is static), so sweeping
+    sampling temperatures never recompiles either.
+
+    Per-row termination: EOS, or the last ``len(stop_ids)`` emitted tokens
+    matching ``stop_ids`` (the stop marker itself is emitted so host-side
+    ``text.split(stop)`` behaves identically).  The loop exits as soon as
+    every row is done, and the final gated ``decode_step`` is skipped so no
+    wasted step runs after the last live token.
+    """
+    b = first_logits.shape[0]
+    n_stop = stop_ids.shape[0]
+    eos = ByteTokenizer.EOS
+    pad = ByteTokenizer.PAD
+    limit = jnp.asarray(limit, jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+
+    key, sk = jax.random.split(key)
+    tok0 = sample_traced(first_logits, sk, temperature, greedy=greedy)
+    out0 = jnp.full((b, buf_len), pad, jnp.int32)
+    state = (jnp.zeros((), jnp.int32), tok0, jnp.zeros((b,), bool), out0,
+             jnp.zeros((), jnp.int32), cache, key)
+
+    def cond(st):
+        step, _tok, done, _out, _n, _cache, _key = st
+        return (step < limit) & ~jnp.all(done)
+
+    def body(st):
+        step, tok, done, out, n, cache, key = st
+        is_eos = tok == eos
+        emit = ~done & ~is_eos
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(emit, tok, pad)[:, None], (0, step))
+        done = done | is_eos
+        if 0 < n_stop <= buf_len:
+            # rolling stop-sequence check over the last n_stop emitted
+            # tokens (dynamic_slice clamps, and unwritten columns hold PAD
+            # which never matches real stop bytes)
+            win = jax.lax.dynamic_slice(out, (0, step - n_stop + 1),
+                                        (b, n_stop))
+            done = done | jnp.all(win == stop_ids[None, :], axis=1)
+        n = n + jnp.sum(emit)
+
+        cont = (step + 1 < limit) & ~jnp.all(done)
+
+        def advance(operand):
+            tok, cache, key = operand
+            logits, cache = T.decode_step(params, cfg, tok[:, None], cache)
+            key, sk = jax.random.split(key)
+            return (sample_traced(logits[:, -1], sk, temperature,
+                                  greedy=greedy), cache, key)
+
+        tok, cache, key = jax.lax.cond(cont, advance, lambda op: op,
+                                       (tok, cache, key))
+        return step + 1, tok, done, out, n, cache, key
+
+    _, _, _, out, n, _, _ = jax.lax.while_loop(cond, body, state)
+    return out, n
+
+
 class InferenceEngine:
-    """Serves one JAX model for batched generation."""
+    """Serves one JAX model for batched generation.
+
+    ``pack_jobs`` (default True) enables packed prefill for ragged job
+    batches on supported configs (pure-attention decoder, no sliding
+    window, no layer scan); unsupported configs or batches with nothing to
+    gain fall back to one job per row transparently.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  tokenizer: Optional[ByteTokenizer] = None,
                  max_seq_len: int = 4096, decode_margin: int = 256,
-                 truncate_long: bool = False):
+                 truncate_long: bool = False, pack_jobs: bool = True):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer or ByteTokenizer()
         self.max_seq_len = max_seq_len
         self.decode_margin = decode_margin
         self.truncate_long = truncate_long
+        self.pack_jobs = pack_jobs
         self.usage = EngineUsage()
 
         self._prefill = jax.jit(
             partial(T.prefill, cfg=cfg), static_argnames=("capacity",))
+        self._prefill_hidden = jax.jit(
+            partial(T.prefill, cfg=cfg, return_hidden=True),
+            static_argnames=("capacity",))
         self._decode = jax.jit(lambda params, tok, cache: T.decode_step(
             params, cfg, tok, cache))
+        self._decode_loop = jax.jit(
+            lambda params, first_logits, cache, key, stop_ids, limit,
+            temperature, *, buf_len, greedy: _fused_decode_loop(
+                params, cfg, first_logits, cache, key, stop_ids, limit,
+                temperature, buf_len=buf_len, greedy=greedy),
+            static_argnames=("buf_len", "greedy"))
 
     # ------------------------------------------------------------------
-    def _prepare_batch(self, prompt_ids: Sequence[Sequence[int]]
-                       ) -> Tuple[Dict[str, jnp.ndarray], int]:
-        """Left-pad to a shared bucketed length; segment -1 marks padding."""
-        if self.truncate_long:
-            # keep the prompt TAIL (instructions come last in the worker
-            # format); graceful degradation for over-long chunks
-            lim = self.max_seq_len
-            prompt_ids = [p if len(p) <= lim else p[-lim:]
-                          for p in prompt_ids]
+    @property
+    def can_pack(self) -> bool:
+        cfg = self.cfg
+        # MoE is excluded: expert capacity dropping depends on the batch
+        # layout, so packing would (legally but surprisingly) change which
+        # tokens get routed — violating the packed==unpacked contract
+        return (self.pack_jobs
+                and not cfg.scan_layers
+                and not cfg.is_encdec
+                and not cfg.is_moe
+                and not cfg.sliding_window
+                and all(cfg.layer_kind(i) == "attn"
+                        for i in range(cfg.num_layers)))
+
+    # ------------------------------------------------------------------
+    def _bucket_checked(self, prompt_ids: Sequence[Sequence[int]]) -> int:
         max_len = max(len(p) for p in prompt_ids)
         s = _bucket(max_len)
         if s > self.max_seq_len:
             raise ValueError(f"prompt length {max_len} exceeds engine "
                              f"max_seq_len {self.max_seq_len}")
+        return s
+
+    def _truncate(self, prompt_ids: Sequence[Sequence[int]]):
+        if not self.truncate_long:
+            return list(prompt_ids)
+        # keep the prompt TAIL (instructions come last in the worker
+        # format); graceful degradation for over-long chunks
+        lim = self.max_seq_len
+        return [p if len(p) <= lim else p[-lim:] for p in prompt_ids]
+
+    def _prepare_batch(self, prompt_ids: Sequence[Sequence[int]],
+                       s: Optional[int] = None
+                       ) -> Tuple[Dict[str, jnp.ndarray], int]:
+        """Left-pad to a shared bucketed length; segment -1 marks padding."""
+        if s is None:
+            s = self._bucket_checked(prompt_ids)
         b = len(prompt_ids)
         toks = np.full((b, s), ByteTokenizer.PAD, np.int32)
         segs = np.full((b, s), -1, np.int32)
@@ -86,43 +229,126 @@ class InferenceEngine:
                 "segment_ids": jnp.asarray(segs)}, s
 
     # ------------------------------------------------------------------
+    def _packed_prefill(self, prompt_ids: Sequence[Sequence[int]],
+                        plan: List[List[int]], s_job: int,
+                        max_new_tokens: int):
+        """Prefill packed rows, then scatter each job's KV slots into its
+        own left-padded decode row.  Returns (first_logits, decode cache).
+
+        Each packed job carries the RoPE positions of its decode-row
+        layout (slots [s_job - len, s_job)), so the primed keys are rotated
+        exactly as an unpacked prefill would have rotated them and decode
+        continues seamlessly at position s_job.
+        """
+        lens = [len(p) for p in prompt_ids]
+        n_jobs, n_rows = len(prompt_ids), len(plan)
+
+        toks = np.full((n_rows, s_job), ByteTokenizer.PAD, np.int32)
+        segs = np.full((n_rows, s_job), -1, np.int32)
+        poss = np.zeros((n_rows, s_job), np.int32)
+        job_row = np.zeros(n_jobs, np.int32)
+        job_off = np.zeros(n_jobs, np.int32)
+        for r, jobs in enumerate(plan):
+            off = 0
+            for sid, i in enumerate(jobs):
+                ln = lens[i]
+                toks[r, off:off + ln] = prompt_ids[i]
+                segs[r, off:off + ln] = sid
+                poss[r, off:off + ln] = np.arange(s_job - ln, s_job)
+                job_row[i], job_off[i] = r, off
+                off += ln
+
+        batch = {"tokens": jnp.asarray(toks),
+                 "segment_ids": jnp.asarray(segs),
+                 "positions": jnp.asarray(poss)}
+        _, cache_p, hidden = self._prefill_hidden(
+            self.params, batch=batch, capacity=s_job)
+
+        # logits of each job's LAST prompt token -> first sampled token
+        last_slot = job_off + np.asarray(lens, np.int32) - 1
+        h_last = hidden[jnp.asarray(job_row), jnp.asarray(last_slot)]
+        first_logits = T.lm_head(self.params, h_last)
+
+        # gather each job's packed KV slots into its decode row (device-side
+        # fancy-indexing with host-precomputed static index maps); only the
+        # first s_job slots can hold prompt KV, so gather that window and
+        # zero-pad the decode tail up to the cache capacity
+        cap = _bucket(s_job + max_new_tokens + self.decode_margin)
+        idx_row = np.zeros((n_jobs, s_job), np.int32)
+        idx_slot = np.zeros((n_jobs, s_job), np.int32)
+        valid = np.zeros((n_jobs, s_job), bool)
+        for i in range(n_jobs):
+            dst = s_job - lens[i]
+            idx_row[i, dst:] = job_row[i]
+            idx_slot[i, dst:] = np.arange(job_off[i], job_off[i] + lens[i])
+            valid[i, dst:] = True
+        ir, isl = jnp.asarray(idx_row), jnp.asarray(idx_slot)
+        vmask = jnp.asarray(valid)
+
+        new_layers = []
+        for lc in cache_p["layers"]:
+            nlc = {}
+            for name, arr in lc.items():
+                g = arr[ir, isl]                # (n_jobs, s_job, ...)
+                ex = vmask.reshape(vmask.shape + (1,) * (g.ndim - 2))
+                g = jnp.where(ex, g, jnp.zeros((), g.dtype))
+                nlc[name] = jnp.pad(
+                    g, ((0, 0), (0, cap - s_job)) + ((0, 0),) * (g.ndim - 2))
+            new_layers.append(nlc)
+        cache = {"layers": new_layers,
+                 "pos": jnp.asarray(s_job, jnp.int32),
+                 "slot_mask": jnp.pad(vmask, ((0, 0), (0, cap - s_job)))}
+        self.usage.prefill_slots += n_rows * s_job
+        return first_logits, cache
+
+    # ------------------------------------------------------------------
     def generate_batch(self, prompts: Sequence[str], *,
                        max_new_tokens: int = 128, temperature: float = 0.0,
                        key=None, stop: str = "\n###") -> List[str]:
         """Generate completions for a ragged batch of prompts."""
         if key is None:
             key = jax.random.PRNGKey(0)
-        prompt_ids = [self.tokenizer.encode(p) for p in prompts]
-        batch, s = self._prepare_batch(prompt_ids)
-        capacity = _bucket(s + max_new_tokens + self.decode_margin)
+        prompt_ids = self._truncate(
+            [self.tokenizer.encode(p) for p in prompts])
+        lens = [len(p) for p in prompt_ids]
+        s_job = self._bucket_checked(prompt_ids)
 
-        logits, cache = self._prefill(self.params, batch=batch,
-                                      capacity=capacity)
-        b = len(prompts)
-        done = np.zeros(b, bool)
-        outputs: List[List[int]] = [[] for _ in range(b)]
-        n_decoded = 0
+        plan = None
+        if self.can_pack and len(prompts) > 1:
+            plan = _pack_plan(lens, s_job)
+            if len(plan) >= len(prompts):    # nothing to gain
+                plan = None
 
-        key, sk = jax.random.split(key)
-        tok = sample(logits[:, -1], sk, temperature=temperature)
-        for step in range(max_new_tokens):
-            tok_np = np.asarray(tok)
-            for i in range(b):
-                if not done[i]:
-                    t = int(tok_np[i])
-                    if t == ByteTokenizer.EOS:
-                        done[i] = True
-                    else:
-                        outputs[i].append(t)
-            n_decoded += int((~done).sum())
-            if done.all() or step == max_new_tokens - 1:
-                break
-            logits, cache = self._decode(self.params, tok[:, None], cache)
-            key, sk = jax.random.split(key)
-            tok = sample(logits[:, -1], sk, temperature=temperature)
+        if plan is not None:
+            first_logits, cache = self._packed_prefill(
+                prompt_ids, plan, s_job, max_new_tokens)
+        else:
+            batch, s = self._prepare_batch(prompt_ids, s_job)
+            capacity = _bucket(s + max_new_tokens + self.decode_margin)
+            logits, cache = self._prefill(self.params, batch=batch,
+                                          capacity=capacity)
+            first_logits = logits[:, -1]
+            self.usage.prefill_slots += int(batch["tokens"].size)
 
-        self.usage.add(sum(len(p) for p in prompt_ids), n_decoded)
-        texts = [self.tokenizer.decode(o) for o in outputs]
+        stop_ids = jnp.asarray(
+            self.tokenizer.encode(stop, bos=False) if stop else [],
+            jnp.int32)
+        # output buffer is bucketed (static) and budget/temperature stay
+        # traced scalars: nearby max_new_tokens values and all positive
+        # temperatures share one compiled executable
+        out, n_dec = self._decode_loop(
+            self.params, first_logits, cache, key, stop_ids,
+            max_new_tokens, temperature,
+            buf_len=_bucket(max_new_tokens, minimum=8),
+            greedy=temperature <= 0.0)
+
+        # the ONLY host<->device result transfers of the call
+        out_np = np.asarray(out)
+        n_decoded = int(n_dec)
+        self.usage.host_transfers += 2
+
+        self.usage.add(sum(lens), n_decoded)
+        texts = [self.tokenizer.decode(row) for row in out_np]
         if stop:
             texts = [t.split(stop)[0] for t in texts]
         return texts

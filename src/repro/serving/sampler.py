@@ -5,13 +5,25 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
-           top_k: int = 0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
+def sample_traced(logits: jnp.ndarray, key, temperature, *, greedy: bool,
+                  top_k: int = 0) -> jnp.ndarray:
+    """Jit-friendly sampler: ``temperature`` is a traced scalar, so every
+    positive temperature shares one compiled executable — only the
+    greedy/stochastic structure (``greedy``, ``top_k``) is static."""
+    if greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / temperature
+    logits = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
     if top_k:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32.  ``temperature`` must be a concrete
+    Python float (selects the greedy branch at trace time); inside jitted
+    loops call :func:`sample_traced` directly so temperature stays a
+    runtime scalar."""
+    return sample_traced(logits, key, temperature,
+                         greedy=temperature <= 0.0, top_k=top_k)

@@ -4,6 +4,13 @@ Takes an arbitrary number of worker prompts, groups them into engine-sized
 batches (optionally replicating each job ``samples`` times for repeated
 test-time sampling, §6.3), runs them through the local engine, and returns
 results in submission order.
+
+Jobs are length-sorted before being grouped so that same-batch prompts
+land in the same engine length bucket: a batch of uniformly-short jobs
+pads to a small bucket instead of inheriting the longest outlier's, which
+cuts prefill padding waste even before the engine's packed-prefill path
+kicks in (and feeds that packer near-uniform rows, where first-fit packs
+tightest).
 """
 from __future__ import annotations
 
@@ -33,6 +40,10 @@ class JobScheduler:
         expanded = [(ji, si, p)
                     for ji, p in enumerate(prompts)
                     for si in range(samples)]
+        # group length-alike jobs into the same batch (stable on
+        # submission order for equal lengths); results are re-sorted into
+        # submission order below, so callers never observe the reordering
+        expanded.sort(key=lambda t: len(t[2]))
         results: List[ScheduledResult] = []
         key = jax.random.PRNGKey(seed)
         for off in range(0, len(expanded), self.max_batch):

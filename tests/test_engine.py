@@ -1,10 +1,14 @@
 """Inference engine + scheduler behaviour with a real (untrained) model."""
 import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as T
 from repro.serving import ByteTokenizer, InferenceEngine, JobScheduler
+from repro.serving.engine import _bucket, _pack_plan
+from repro.serving.sampler import sample
 
 
 @pytest.fixture(scope="module")
@@ -12,6 +16,43 @@ def engine():
     cfg = get_smoke_config("llama3.2-1b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     return InferenceEngine(cfg, params, max_seq_len=1024)
+
+
+@pytest.fixture(scope="module")
+def engine_nopack(engine):
+    return InferenceEngine(engine.cfg, engine.params, max_seq_len=1024,
+                           pack_jobs=False)
+
+
+def _reference_generate(engine, prompts, max_new_tokens, stop="\n###"):
+    """The pre-fusion per-token host loop: the decode-loop oracle."""
+    prompt_ids = [engine.tokenizer.encode(p) for p in prompts]
+    batch, s = engine._prepare_batch(prompt_ids)
+    capacity = _bucket(s + max_new_tokens + engine.decode_margin)
+    logits, cache = engine._prefill(engine.params, batch=batch,
+                                    capacity=capacity)
+    b = len(prompts)
+    done = np.zeros(b, bool)
+    outputs = [[] for _ in range(b)]
+    key = jax.random.PRNGKey(0)
+    key, sk = jax.random.split(key)
+    tok = sample(logits[:, -1], sk, temperature=0.0)
+    for step in range(max_new_tokens):
+        tok_np = np.asarray(tok)
+        for i in range(b):
+            if not done[i]:
+                t = int(tok_np[i])
+                if t == ByteTokenizer.EOS:
+                    done[i] = True
+                else:
+                    outputs[i].append(t)
+        if done.all() or step == max_new_tokens - 1:
+            break
+        logits, cache = engine._decode(engine.params, tok[:, None], cache)
+        key, sk = jax.random.split(key)
+        tok = sample(logits[:, -1], sk, temperature=0.0)
+    texts = [engine.tokenizer.decode(o) for o in outputs]
+    return [t.split(stop)[0] for t in texts]
 
 
 def test_ragged_batch(engine):
@@ -52,3 +93,176 @@ def test_tokenizer_roundtrip():
     tok = ByteTokenizer()
     for s in ["hello", "üñïçôdé", "", "a\nb\tc", "数字123"]:
         assert tok.decode(tok.encode(s)) == s
+
+
+# ---------------------------------------------------------------------------
+# fused decode loop
+# ---------------------------------------------------------------------------
+
+
+def test_fused_loop_matches_reference_loop(engine, engine_nopack):
+    """Greedy fused while_loop decode == the old per-token host loop."""
+    prompts = ["fused decode", "a" * 50, "short"]
+    want = _reference_generate(engine, prompts, max_new_tokens=12)
+    assert engine_nopack.generate_batch(prompts, max_new_tokens=12) == want
+    # and the packed path agrees too
+    assert engine.generate_batch(prompts, max_new_tokens=12) == want
+
+
+def test_fused_loop_per_row_eos_early_stop(engine):
+    """A row whose first sampled token is EOS emits nothing; live rows
+    keep decoding."""
+    batch, s = engine._prepare_batch(
+        [engine.tokenizer.encode(p) for p in ["stop now", "continue"]])
+    logits, cache = engine._prefill(engine.params, batch=batch,
+                                    capacity=_bucket(s + 16 + 256))
+    v = logits.shape[-1]
+    first = np.full((2, v), -1e9, np.float32)
+    first[0, ByteTokenizer.EOS] = 0.0   # row 0 terminates immediately
+    first[1, ord("A")] = 0.0            # row 1 emits 'A' then free-runs
+    out, n = engine._decode_loop(
+        engine.params, jnp.asarray(first), cache, jax.random.PRNGKey(0),
+        jnp.zeros((0,), jnp.int32), 8, 0.0, buf_len=8, greedy=True)
+    out = np.asarray(out)
+    assert (out[0] == ByteTokenizer.PAD).all()
+    assert out[1, 0] == ord("A")
+    assert int(n) >= 1
+
+
+def test_fused_loop_all_eos_exits_immediately(engine):
+    batch, s = engine._prepare_batch(
+        [engine.tokenizer.encode("x"), engine.tokenizer.encode("y")])
+    logits, cache = engine._prefill(engine.params, batch=batch,
+                                    capacity=_bucket(s + 16 + 256))
+    v = logits.shape[-1]
+    first = np.full((2, v), -1e9, np.float32)
+    first[:, ByteTokenizer.EOS] = 0.0
+    out, n = engine._decode_loop(
+        engine.params, jnp.asarray(first), cache, jax.random.PRNGKey(0),
+        jnp.zeros((0,), jnp.int32), 8, 0.0, buf_len=8, greedy=True)
+    assert int(n) == 0
+    assert (np.asarray(out) == ByteTokenizer.PAD).all()
+
+
+def test_decode_transfers_constant_in_tokens(engine):
+    """O(1) host<->device transfers per generate_batch call, independent
+    of max_new_tokens (the acceptance-criterion counter)."""
+    t0 = engine.usage.host_transfers
+    engine.generate_batch(["count transfers"], max_new_tokens=4)
+    t_short = engine.usage.host_transfers - t0
+    t1 = engine.usage.host_transfers
+    engine.generate_batch(["count transfers"], max_new_tokens=48)
+    t_long = engine.usage.host_transfers - t1
+    assert t_short == t_long
+    assert t_long <= 4  # constant, small
+
+
+def test_on_device_stop_sequence_halts_decode(engine):
+    """The fused loop must stop DECODING at the stop marker, not just trim
+    text on the host: force the first token to equal a one-byte stop
+    sequence and check the loop emits nothing further."""
+    batch, s = engine._prepare_batch([engine.tokenizer.encode("marker")])
+    logits, cache = engine._prefill(engine.params, batch=batch,
+                                    capacity=_bucket(s + 16 + 256))
+    v = logits.shape[-1]
+    first = np.full((1, v), -1e9, np.float32)
+    first[0, ord("A")] = 0.0
+    # free-running (no stop): the model emits more than one token
+    out_free, n_free = engine._decode_loop(
+        engine.params, jnp.asarray(first), cache, jax.random.PRNGKey(0),
+        jnp.zeros((0,), jnp.int32), 16, 0.0, buf_len=16, greedy=True)
+    assert int(n_free) > 1
+    # stop marker == the forced first token: decode halts on device
+    out_stop, n_stop = engine._decode_loop(
+        engine.params, jnp.asarray(first), cache, jax.random.PRNGKey(0),
+        jnp.asarray([ord("A")], jnp.int32), 16, 0.0, buf_len=16,
+        greedy=True)
+    out_stop = np.asarray(out_stop)
+    assert int(n_stop) == 1                              # only the marker
+    assert out_stop[0, 0] == ord("A")
+    assert (out_stop[0, 1:] == ByteTokenizer.PAD).all()  # nothing after
+    # and the public API trims the marker off the returned text
+    a = engine.generate("stop marker", max_new_tokens=24, stop="\n###")
+    b = engine.generate("stop marker", max_new_tokens=24, stop="")
+    assert b.split("\n###")[0] == a
+
+
+# ---------------------------------------------------------------------------
+# packed prefill
+# ---------------------------------------------------------------------------
+
+
+def test_packed_prefill_matches_one_job_per_row(engine, engine_nopack):
+    prompts = ["pack me", "b" * 40, "the quick brown fox " * 4, "x",
+               "hello world, hello"]
+    packed = engine.generate_batch(prompts, max_new_tokens=16)
+    unpacked = engine_nopack.generate_batch(prompts, max_new_tokens=16)
+    assert packed == unpacked
+
+
+def test_packing_reduces_prefill_slots(engine, engine_nopack):
+    prompts = ["a" * 20, "b" * 30, "c" * 25, "d" * 10, "e" * 15, "f" * 28]
+    s0 = engine.usage.prefill_slots
+    engine.generate_batch(prompts, max_new_tokens=2)
+    packed_slots = engine.usage.prefill_slots - s0
+    s1 = engine_nopack.usage.prefill_slots
+    engine_nopack.generate_batch(prompts, max_new_tokens=2)
+    unpacked_slots = engine_nopack.usage.prefill_slots - s1
+    assert packed_slots < unpacked_slots
+
+
+def test_pack_plan_first_fit():
+    plan = _pack_plan([20, 30, 25, 10], 64)
+    assert sorted(i for row in plan for i in row) == [0, 1, 2, 3]
+    assert len(plan) < 4
+    for row in plan:
+        assert sum([20, 30, 25, 10][i] for i in row) <= 64
+
+
+def test_single_prompt_never_packs(engine):
+    # generate() goes through the unpacked path (plan has nothing to gain)
+    assert isinstance(engine.generate("solo", max_new_tokens=2), str)
+
+
+def test_moe_configs_never_pack():
+    """Expert-capacity routing depends on batch layout, so packing would
+    change MoE outputs — can_pack must refuse."""
+    cfg = get_smoke_config("olmoe-1b-7b")
+    assert cfg.is_moe
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_seq_len=256, pack_jobs=True)
+    assert not eng.can_pack
+
+
+def test_temperature_sweep_shares_executable(engine):
+    """Distinct positive temperatures must not recompile the fused loop
+    (temperature is a traced scalar; only greedy-ness is static)."""
+    engine.generate_batch(["warm"], max_new_tokens=4, temperature=0.5)
+    n0 = engine._decode_loop._cache_size()
+    for t in (0.7, 0.9, 1.3):
+        engine.generate_batch(["warm"], max_new_tokens=4, temperature=t)
+    assert engine._decode_loop._cache_size() == n0
+
+
+# ---------------------------------------------------------------------------
+# scheduler batching
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_length_sorts_batches():
+    """Same-batch prompts must be length-neighbours, and results must
+    still come back in submission order."""
+    batches = []
+
+    def fake_generate(prompts, temperature=0.0, key=None,
+                      max_new_tokens=0):
+        batches.append(list(prompts))
+        return [p[::-1] for p in prompts]
+
+    prompts = ["a" * n for n in (500, 3, 480, 5, 490, 7, 470, 9)]
+    res = JobScheduler(fake_generate, max_batch=4).run(prompts)
+    assert [r.text for r in res] == [p[::-1] for p in prompts]
+    assert len(batches) == 2
+    lens = [sorted(len(p) for p in b) for b in batches]
+    assert lens[0] == [3, 5, 7, 9]          # shorts together
+    assert lens[1] == [470, 480, 490, 500]  # longs together
