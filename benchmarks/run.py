@@ -272,9 +272,10 @@ def kernels(n_tasks: int):
 
 
 def engine_bench(n_tasks: int):
-    """Decode tokens/sec through the fused while_loop and prefill padding
-    waste with/without job packing; writes the BENCH_engine.json baseline
-    that later PRs diff against."""
+    """Decode tokens/sec through the fused while_loop, prefill padding
+    waste with/without job packing, and continuous-batching vs convoy
+    throughput on a ragged-budget batch; writes the BENCH_engine.json
+    baseline that later PRs diff against."""
     from repro.configs import get_smoke_config
     from repro.models import transformer as model_lib
     from repro.serving import InferenceEngine
@@ -307,9 +308,46 @@ def engine_bench(n_tasks: int):
                           "prefill_pad_frac": round(pad_frac, 4),
                           "host_transfers_per_call": transfers,
                           "decode_tokens": int(decoded)}
+
+    # --- continuous batching vs convoy on ragged per-job budgets --------
+    # MinionS rounds mix quick extractions with a few long syntheses; the
+    # figure of merit is USEFUL tokens/sec (sum of per-job budgets /
+    # wall-clock).  The convoy baseline is the pre-PR2 EngineClient path:
+    # fixed submission-order slices where every group decodes to its
+    # longest member's budget.
+    budgets = [8, 8, 8, 96, 8, 8, 8, 96, 8, 8, 8, 96]
+    useful = sum(budgets)
+    slots = 4
+
+    def convoy(eng):
+        for off in range(0, len(prompts), slots):
+            grp = slice(off, off + slots)
+            eng.generate_batch(prompts[grp],
+                               max_new_tokens=max(budgets[grp]))
+
+    def continuous(eng):
+        eng.serve(prompts, max_new_tokens=budgets, slots=slots)
+
+    for mode, run in (("convoy", convoy), ("continuous", continuous)):
+        eng = InferenceEngine(cfg, params, max_seq_len=1024)
+        run(eng)                             # warm/compile all shapes
+        d0, t0 = eng.usage.decode_tokens, time.time()
+        run(eng)
+        dt = time.time() - t0
+        decoded = eng.usage.decode_tokens - d0
+        useful_tok_s = useful / max(dt, 1e-9)
+        emit(f"engine/ragged_{mode}", dt * 1e6,
+             f"useful_tok_per_s={useful_tok_s:.1f};"
+             f"decoded={decoded};useful={useful}")
+        baseline[f"ragged_{mode}"] = {
+            "useful_tok_per_s": round(useful_tok_s, 1),
+            "decode_tokens": int(decoded),
+            "useful_tokens": useful}
+
     with open("BENCH_engine.json", "w") as f:
         json.dump({"config": cfg.name, "n_jobs": len(prompts),
-                   "max_new_tokens": max_new, **baseline}, f, indent=2)
+                   "max_new_tokens": max_new, "ragged_budgets": budgets,
+                   "ragged_slots": slots, **baseline}, f, indent=2)
         f.write("\n")
 
 

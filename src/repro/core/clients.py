@@ -64,14 +64,22 @@ class UsageMeter:
 
 
 class EngineClient:
-    """A real JAX model served by repro.serving.InferenceEngine."""
+    """A real JAX model served by repro.serving.InferenceEngine.
+
+    Worker fan-outs stream through a :class:`JobScheduler` (one pool of
+    ``max_batch`` decode slots, continuously batched) instead of slicing
+    prompts into fixed submission-order groups — a mixed-length MinionS
+    round no longer pads every group to its longest outlier's bucket, and
+    a long job no longer convoys the jobs queued behind it."""
 
     def __init__(self, engine, name: str = "engine", *, seed: int = 0,
                  max_batch: int = 8):
+        from repro.serving import JobScheduler
         self.engine = engine
         self.name = name
         self.seed = seed
         self.max_batch = max_batch
+        self.scheduler = JobScheduler(engine, max_batch=max_batch)
 
     def complete(self, prompt: str, *, temperature: float = 0.0,
                  max_tokens: int = 256) -> str:
@@ -81,12 +89,6 @@ class EngineClient:
     def complete_batch(self, prompts: Sequence[str], *,
                        temperature: float = 0.0,
                        max_tokens: int = 256) -> List[str]:
-        import jax
-        outs: List[str] = []
-        key = jax.random.PRNGKey(self.seed)
-        for off in range(0, len(prompts), self.max_batch):
-            key, sub = jax.random.split(key)
-            outs.extend(self.engine.generate_batch(
-                list(prompts[off:off + self.max_batch]),
-                max_new_tokens=max_tokens, temperature=temperature, key=sub))
-        return outs
+        res = self.scheduler.run(list(prompts), temperature=temperature,
+                                 seed=self.seed, max_new_tokens=max_tokens)
+        return [r.text for r in res]

@@ -101,7 +101,15 @@ def run_minions(local, remote, context: str, query: str,
 
         if rec.decision == "provide_final_answer" or force_final:
             answer = data.get("answer")
-            answer = None if answer is None else str(answer)
+            if answer is None:
+                # no "answer" key: the remote's prose explanation (or,
+                # for unparseable JSON, the raw synthesize text) is still
+                # its best final statement — better than silently
+                # answering nothing
+                answer = (str(data.get("explanation") or "").strip()
+                          or syn_text.strip() or None)
+            else:
+                answer = str(answer)
             break
 
         # -- carry context between rounds (§5.2 sequential protocol) -------

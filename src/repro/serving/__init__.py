@@ -1,7 +1,10 @@
+"""Local serving substrate: engine (batched + continuously-batched
+generation), streaming job scheduler, samplers and byte tokenizer."""
 from .engine import EngineUsage, InferenceEngine
 from .scheduler import JobScheduler, ScheduledResult
-from .sampler import sample
+from .sampler import sample, sample_rows, split_rows
 from .tokenizer import ByteTokenizer, approx_tokens
 
 __all__ = ["InferenceEngine", "EngineUsage", "JobScheduler",
-           "ScheduledResult", "sample", "ByteTokenizer", "approx_tokens"]
+           "ScheduledResult", "sample", "sample_rows", "split_rows",
+           "ByteTokenizer", "approx_tokens"]

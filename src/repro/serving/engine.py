@@ -15,6 +15,19 @@ jobs isolated while padding slots stop burning FLOPs — and the primed KV
 cache is then scattered into one decode row per job.  RoPE positions are
 assigned from each job's eventual decode-row layout, so packed and
 unpacked prefill are numerically equivalent.
+
+Continuous batching (:meth:`InferenceEngine.serve`): a persistent pool of
+``slots`` decode rows runs one jitted while_loop that exits as soon as ANY
+row finishes (EOS / stop / per-row token budget) instead of waiting for
+all of them.  The host then harvests the finished rows, prefills queued
+jobs with the RoPE positions of their destination layout (prompt ending at
+the pool's current decode position) and scatters the primed KV straight
+into the freed rows — the same gather machinery packed prefill uses — then
+resumes the loop.  Each row carries its own traced token budget, stop
+state, temperature and RNG lane, so admissions never recompile and never
+perturb what a live neighbour row samples.  Host transfers stay O(number
+of admissions), not O(tokens); one long job no longer convoys its
+siblings.
 """
 from __future__ import annotations
 
@@ -29,7 +42,7 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
-from .sampler import sample_traced
+from .sampler import sample_rows, sample_traced, split_rows
 from .tokenizer import ByteTokenizer
 
 
@@ -44,6 +57,24 @@ class EngineUsage:
     # host<->device result transfers; the fused decode loop keeps this O(1)
     # per generate_batch call regardless of max_new_tokens
     host_transfers: int = 0
+    # continuous-batching counters: jobs admitted into pool rows, jobs
+    # harvested from them, and cache epochs started (serve only)
+    admitted_jobs: int = 0
+    finished_jobs: int = 0
+    serve_epochs: int = 0
+    # ("admit" | "finish", job_index, decode_position, row) in event order —
+    # the observable record that a queued job entered a freed row while its
+    # siblings were still decoding.  Bounded: only the most recent
+    # MAX_EVENTS survive, so a long-lived engine doesn't grow memory with
+    # every job it ever served.
+    events: List[Tuple[str, int, int, int]] = dataclasses.field(
+        default_factory=list)
+    MAX_EVENTS = 4096
+
+    def record(self, kind: str, job: int, pos: int, row: int):
+        self.events.append((kind, job, pos, row))
+        if len(self.events) > self.MAX_EVENTS:
+            del self.events[:len(self.events) - self.MAX_EVENTS]
 
     def add(self, prefill: int, decode: int):
         self.prefill_tokens += prefill
@@ -145,6 +176,67 @@ def _fused_decode_loop(params, cfg: ModelConfig, first_logits, cache, key,
     return out, n
 
 
+def _serve_decode_loop(params, cfg: ModelConfig, tok, finished, out, n,
+                       cache, keys, live, limit, temperature, stop_ids, *,
+                       buf_len: int):
+    """Slot-pool decode: run until ANY live row finishes, then yield.
+
+    Unlike :func:`_fused_decode_loop` (which drains a whole batch), this
+    loop services a persistent row pool: per-row traced token budget
+    (``limit``), temperature and RNG lane (``keys``), and a per-row emit
+    cursor ``n`` so rows admitted at different times write independent
+    output prefixes.  The condition exits the moment a live row raises its
+    ``finished`` flag, handing control to the host scheduler, which
+    harvests that row, admits a queued job into it and resumes with the
+    same compiled executable.
+
+    On entry every live row's ``tok`` is a PENDING token (sampled, not yet
+    emitted); the body emits pending tokens, checks termination, then
+    unconditionally samples the next pending token — so at exit the
+    surviving rows again hold pending tokens and resume seamlessly.  The
+    price is one speculative ``decode_step`` per yield (O(admissions)
+    waste, not O(tokens)).
+
+    Stop detection mirrors the fused loop: the marker is emitted, rows
+    whose window would start before their first emitted token never
+    false-match (the gather is guarded by ``base >= 0``), and a stop
+    longer than ``buf_len`` disables on-device detection entirely.
+    """
+    eos = ByteTokenizer.EOS
+    n_stop = stop_ids.shape[0]
+    cols = jnp.arange(buf_len)[None, :]
+
+    def cond(st):
+        _tok, finished, _out, _n, _cache, _keys = st
+        return ~jnp.any(finished & live)
+
+    def body(st):
+        tok, finished, out, n, cache, keys = st
+        is_eos = tok == eos
+        emit = live & ~finished & ~is_eos & (n < limit)
+        idx = jnp.clip(n, 0, buf_len - 1)
+        out = jnp.where(emit[:, None] & (cols == idx[:, None]),
+                        tok[:, None], out)
+        n = n + emit.astype(jnp.int32)
+        finished = finished | (live & is_eos)
+        if 0 < n_stop <= buf_len:
+            base = n - n_stop
+            wcols = jnp.clip(base[:, None] + jnp.arange(n_stop)[None, :],
+                             0, buf_len - 1)
+            win = jnp.take_along_axis(out, wcols, axis=1)
+            hit = (base >= 0) & jnp.all(win == stop_ids[None, :], axis=1)
+            finished = finished | (live & hit)
+        finished = finished | (live & (n >= limit))
+
+        logits, cache = T.decode_step(params, cfg, tok[:, None], cache)
+        keys, sub = split_rows(keys)
+        tok = sample_rows(logits[:, -1], sub, temperature)
+        return tok, finished, out, n, cache, keys
+
+    return jax.lax.while_loop(
+        cond, body, (tok, finished, out, n, cache, keys))
+
+
 class InferenceEngine:
     """Serves one JAX model for batched generation.
 
@@ -180,30 +272,47 @@ class InferenceEngine:
                 params, cfg, first_logits, cache, key, stop_ids, limit,
                 temperature, buf_len=buf_len, greedy=greedy),
             static_argnames=("buf_len", "greedy"))
+        self._serve_loop = jax.jit(
+            lambda params, tok, finished, out, n, cache, keys, live, limit,
+            temperature, stop_ids, *, buf_len: _serve_decode_loop(
+                params, cfg, tok, finished, out, n, cache, keys, live,
+                limit, temperature, stop_ids, buf_len=buf_len),
+            static_argnames=("buf_len",))
 
     # ------------------------------------------------------------------
     @property
-    def can_pack(self) -> bool:
+    def can_serve(self) -> bool:
+        """Whether the cache layout supports slot admission (and packing):
+        scattering a primed prompt into a live row addresses per-slot KV,
+        so only pure-attention decoders qualify — SSM/hybrid state and
+        cross-attention memory have no slot axis, sliding windows ring-wrap
+        it, and MoE routing would let an admitted neighbour change which
+        experts a live row's tokens reach."""
         cfg = self.cfg
-        # MoE is excluded: expert capacity dropping depends on the batch
-        # layout, so packing would (legally but surprisingly) change which
-        # tokens get routed — violating the packed==unpacked contract
-        return (self.pack_jobs
-                and not cfg.scan_layers
+        return (not cfg.scan_layers
                 and not cfg.is_encdec
                 and not cfg.is_moe
                 and not cfg.sliding_window
                 and all(cfg.layer_kind(i) == "attn"
                         for i in range(cfg.num_layers)))
 
+    @property
+    def can_pack(self) -> bool:
+        return self.pack_jobs and self.can_serve
+
     # ------------------------------------------------------------------
+    def _bucket_clamped(self, n: int) -> int:
+        # clamp: _bucket rounds up, so a non-power-of-two max_seq_len
+        # (cap 3000 -> bucket 4096) must not push a batch past the limit
+        # callers (and _truncate) enforce
+        return min(_bucket(n), self.max_seq_len)
+
     def _bucket_checked(self, prompt_ids: Sequence[Sequence[int]]) -> int:
         max_len = max(len(p) for p in prompt_ids)
-        s = _bucket(max_len)
-        if s > self.max_seq_len:
+        if max_len > self.max_seq_len:
             raise ValueError(f"prompt length {max_len} exceeds engine "
                              f"max_seq_len {self.max_seq_len}")
-        return s
+        return self._bucket_clamped(max_len)
 
     def _truncate(self, prompt_ids: Sequence[Sequence[int]]):
         if not self.truncate_long:
@@ -229,16 +338,19 @@ class InferenceEngine:
                 "segment_ids": jnp.asarray(segs)}, s
 
     # ------------------------------------------------------------------
-    def _packed_prefill(self, prompt_ids: Sequence[Sequence[int]],
-                        plan: List[List[int]], s_job: int,
-                        max_new_tokens: int):
-        """Prefill packed rows, then scatter each job's KV slots into its
-        own left-padded decode row.  Returns (first_logits, decode cache).
+    def _prime_jobs(self, prompt_ids: Sequence[Sequence[int]],
+                    plan: List[List[int]], s_job: int, end_pos: int):
+        """Prefill jobs (packed into rows per ``plan``) and gather each
+        job's KV into its own left-padded (n_jobs, s_job) row.
 
-        Each packed job carries the RoPE positions of its decode-row
-        layout (slots [s_job - len, s_job)), so the primed keys are rotated
-        exactly as an unpacked prefill would have rotated them and decode
-        continues seamlessly at position s_job.
+        Each job carries the RoPE positions of its destination layout —
+        tokens occupy cache slots [end_pos - len, end_pos) — so the primed
+        keys are rotated exactly as a direct prefill into that layout
+        would rotate them, and decode continues seamlessly at position
+        ``end_pos``.  ``end_pos == s_job`` reproduces packed prefill for a
+        fresh batch; serve admission passes the pool's current decode
+        position instead.  Returns (first_logits, per-layer KV dicts of
+        (n_jobs, s_job, ...) arrays, valid mask (n_jobs, s_job)).
         """
         lens = [len(p) for p in prompt_ids]
         n_jobs, n_rows = len(prompt_ids), len(plan)
@@ -254,7 +366,7 @@ class InferenceEngine:
                 ln = lens[i]
                 toks[r, off:off + ln] = prompt_ids[i]
                 segs[r, off:off + ln] = sid
-                poss[r, off:off + ln] = np.arange(s_job - ln, s_job)
+                poss[r, off:off + ln] = np.arange(end_pos - ln, end_pos)
                 job_row[i], job_off[i] = r, off
                 off += ln
 
@@ -270,10 +382,7 @@ class InferenceEngine:
         first_logits = T.lm_head(self.params, h_last)
 
         # gather each job's packed KV slots into its decode row (device-side
-        # fancy-indexing with host-precomputed static index maps); only the
-        # first s_job slots can hold prompt KV, so gather that window and
-        # zero-pad the decode tail up to the cache capacity
-        cap = _bucket(s_job + max_new_tokens + self.decode_margin)
+        # fancy-indexing with host-precomputed static index maps)
         idx_row = np.zeros((n_jobs, s_job), np.int32)
         idx_slot = np.zeros((n_jobs, s_job), np.int32)
         valid = np.zeros((n_jobs, s_job), bool)
@@ -285,20 +394,35 @@ class InferenceEngine:
         ir, isl = jnp.asarray(idx_row), jnp.asarray(idx_slot)
         vmask = jnp.asarray(valid)
 
-        new_layers = []
+        layers = []
         for lc in cache_p["layers"]:
             nlc = {}
             for name, arr in lc.items():
                 g = arr[ir, isl]                # (n_jobs, s_job, ...)
                 ex = vmask.reshape(vmask.shape + (1,) * (g.ndim - 2))
-                g = jnp.where(ex, g, jnp.zeros((), g.dtype))
-                nlc[name] = jnp.pad(
+                nlc[name] = jnp.where(ex, g, jnp.zeros((), g.dtype))
+            layers.append(nlc)
+        self.usage.prefill_slots += n_rows * s_job
+        return first_logits, layers, vmask
+
+    def _packed_prefill(self, prompt_ids: Sequence[Sequence[int]],
+                        plan: List[List[int]], s_job: int,
+                        max_new_tokens: int):
+        """Packed prefill for a fresh batch: prime the jobs, then zero-pad
+        the gathered rows out to the decode capacity.  Returns
+        (first_logits, decode cache)."""
+        first_logits, layers, vmask = self._prime_jobs(
+            prompt_ids, plan, s_job, end_pos=s_job)
+        cap = _bucket(s_job + max_new_tokens + self.decode_margin)
+        new_layers = []
+        for nlc in layers:
+            new_layers.append({
+                name: jnp.pad(
                     g, ((0, 0), (0, cap - s_job)) + ((0, 0),) * (g.ndim - 2))
-            new_layers.append(nlc)
+                for name, g in nlc.items()})
         cache = {"layers": new_layers,
                  "pos": jnp.asarray(s_job, jnp.int32),
                  "slot_mask": jnp.pad(vmask, ((0, 0), (0, cap - s_job)))}
-        self.usage.prefill_slots += n_rows * s_job
         return first_logits, cache
 
     # ------------------------------------------------------------------
@@ -352,6 +476,201 @@ class InferenceEngine:
         if stop:
             texts = [t.split(stop)[0] for t in texts]
         return texts
+
+    # ------------------------------------------------------------------
+    def serve(self, prompts: Sequence[str], *,
+              max_new_tokens=128, temperature=0.0, key=None,
+              stop: str = "\n###", slots: int = 4) -> List[str]:
+        """Continuously-batched generation over a fixed pool of decode rows.
+
+        Jobs stream through ``slots`` persistent rows: the jitted
+        :func:`_serve_decode_loop` yields whenever any row finishes, the
+        freed rows are harvested, and queued jobs are prefilled (packed,
+        with destination-layout RoPE positions) and scattered into them
+        before the loop resumes — a short job never waits for a long
+        sibling to drain (no convoy effect).  ``max_new_tokens`` and
+        ``temperature`` may be scalars or per-job sequences; results come
+        back in submission order; all jobs share one ``stop`` string.
+
+        Admission is length-aware: a fresh cache epoch admits the longest
+        queued jobs (they define the prompt bucket and can only start at an
+        epoch boundary), while mid-epoch the longest job that fits the
+        current decode position and remaining cache capacity is preferred.
+        When the pool drains and nothing fits the epoch's capacity, the
+        cache is retired and a fresh epoch starts.  Configs whose caches
+        have no slot axis (see :attr:`can_serve`) degrade to convoy batches
+        of ``slots`` jobs.
+        """
+        n = len(prompts)
+        if n == 0:
+            return []
+        budgets = (list(max_new_tokens)
+                   if isinstance(max_new_tokens, (list, tuple))
+                   else [int(max_new_tokens)] * n)
+        temps = (list(temperature) if isinstance(temperature, (list, tuple))
+                 else [float(temperature)] * n)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if not self.can_serve:
+            # degrade to the scheduler's grouped convoy path — the single
+            # implementation of param-class isolation (a greedy job never
+            # inherits a stochastic neighbour's temperature or budget) and
+            # within-class length grouping.  The plain-lambda target keeps
+            # the scheduler off its engine path, so no recursion.
+            from .scheduler import JobScheduler
+            sched = JobScheduler(
+                lambda ps, **kw: self.generate_batch(ps, stop=stop, **kw),
+                max_batch=max(slots, 1))
+            for j in range(n):
+                sched.submit(prompts[j], temperature=temps[j],
+                             max_new_tokens=budgets[j])
+            return [r.text for r in sched.drain(key=key)]
+
+        pad = ByteTokenizer.PAD
+        slots = max(1, min(slots, n))
+        prompt_ids = self._truncate(
+            [self.tokenizer.encode(p) for p in prompts])
+        self._bucket_checked(prompt_ids)     # raise early on over-long jobs
+        buf_len = _bucket(max(budgets + [1]), minimum=8)
+        stop_ids = jnp.asarray(
+            self.tokenizer.encode(stop, bos=False) if stop else [],
+            jnp.int32)
+
+        results: List[Optional[str]] = [None] * n
+        queue = list(range(n))
+        row_job = [-1] * slots
+        cache = None
+        tok = finished = out = n_emit = keys = live = limit = temp = None
+        pos = 0
+        total_prefill = total_decode = 0
+
+        def by_length(jobs):
+            return sorted(jobs, key=lambda j: (-len(prompt_ids[j]), j))
+
+        def admission_groups(rows, jids):
+            """Split an admission set into prefill groups: a packing engine
+            primes the whole set in one packed prefill (first-fit absorbs
+            the short jobs into the outlier's row); otherwise group by
+            length bucket so a long outlier doesn't pad every short
+            sibling's prefill row."""
+            if self.can_pack and len(jids) > 1:
+                return [(list(rows), list(jids))]
+            groups: Dict[int, Tuple[List[int], List[int]]] = {}
+            for r, j in zip(rows, jids):
+                b = self._bucket_clamped(len(prompt_ids[j]))
+                grp = groups.setdefault(b, ([], []))
+                grp[0].append(r)
+                grp[1].append(j)
+            return [groups[b] for b in sorted(groups)]
+
+        def admit(rows, jids):
+            """Prefill ``jids`` and scatter their primed KV into ``rows``:
+            job prompts land in slots [pos - len, pos) of their row, so the
+            pool's shared decode position needs no per-row offset."""
+            nonlocal tok, finished, out, n_emit, keys, live, limit, temp
+            ids = [prompt_ids[j] for j in jids]
+            lens = [len(p) for p in ids]
+            s_a = self._bucket_checked(ids)
+            plan = (_pack_plan(lens, s_a)
+                    if self.can_pack and len(ids) > 1
+                    else [[i] for i in range(len(ids))])
+            first_logits, layers, _ = self._prime_jobs(ids, plan, s_a,
+                                                       end_pos=pos)
+            rows_arr = jnp.asarray(rows, jnp.int32)
+            window = jnp.asarray(pos - s_a + np.arange(s_a), jnp.int32)
+            new_layers = []
+            for lc, nlc in zip(cache["layers"], layers):
+                new_layers.append({
+                    name: arr.at[rows_arr[:, None], window[None, :]].set(
+                        nlc[name].astype(arr.dtype))
+                    for name, arr in lc.items()})
+            cache["layers"] = new_layers
+            cap = cache["slot_mask"].shape[1]
+            mrows = np.zeros((len(jids), cap), bool)
+            for i, ln in enumerate(lens):
+                mrows[i, pos - ln:pos] = True
+            cache["slot_mask"] = cache["slot_mask"].at[rows_arr].set(
+                jnp.asarray(mrows))
+            jkeys = jnp.stack([jax.random.fold_in(key, j) for j in jids])
+            jkeys, sub = split_rows(jkeys)
+            jtemp = jnp.asarray([temps[j] for j in jids], jnp.float32)
+            tok = tok.at[rows_arr].set(sample_rows(first_logits, sub, jtemp))
+            finished = finished.at[rows_arr].set(False)
+            live = live.at[rows_arr].set(True)
+            out = out.at[rows_arr].set(pad)
+            n_emit = n_emit.at[rows_arr].set(0)
+            keys = keys.at[rows_arr].set(jkeys)
+            limit = limit.at[rows_arr].set(
+                jnp.asarray([budgets[j] for j in jids], jnp.int32))
+            temp = temp.at[rows_arr].set(jtemp)
+            for r, j in zip(rows, jids):
+                row_job[r] = j
+                queue.remove(j)
+                self.usage.admitted_jobs += 1
+                self.usage.record("admit", j, pos, r)
+            return sum(lens)
+
+        while queue or any(j >= 0 for j in row_job):
+            if cache is None:
+                self.usage.serve_epochs += 1
+                first = by_length(queue)[:slots]
+                s0 = self._bucket_checked([prompt_ids[j] for j in first])
+                cap = _bucket(s0 + buf_len + self.decode_margin)
+                cache = T.init_cache(self.cfg, slots, cap)
+                pos = s0
+                cache["pos"] = jnp.asarray(pos, jnp.int32)
+                tok = jnp.zeros((slots,), jnp.int32)
+                finished = jnp.ones((slots,), bool)
+                live = jnp.zeros((slots,), bool)
+                out = jnp.full((slots, buf_len), pad, jnp.int32)
+                n_emit = jnp.zeros((slots,), jnp.int32)
+                keys = jnp.zeros((slots, 2), jnp.uint32)
+                limit = jnp.zeros((slots,), jnp.int32)
+                temp = jnp.zeros((slots,), jnp.float32)
+                row_job = [-1] * slots
+                for g_rows, g_jids in admission_groups(
+                        list(range(len(first))), first):
+                    total_prefill += admit(g_rows, g_jids)
+            else:
+                free = [r for r in range(slots) if row_job[r] == -1]
+                cap = cache["slot_mask"].shape[1]
+                fits = [j for j in by_length(queue)
+                        if self._bucket_clamped(len(prompt_ids[j])) <= pos
+                        and pos + budgets[j] <= cap]
+                if free and fits:
+                    pick = fits[:len(free)]
+                    for g_rows, g_jids in admission_groups(
+                            free[:len(pick)], pick):
+                        total_prefill += admit(g_rows, g_jids)
+                elif not any(j >= 0 for j in row_job):
+                    cache = None     # pool drained, nothing fits: new epoch
+                    continue
+
+            tok, finished, out, n_emit, cache, keys = self._serve_loop(
+                self.params, tok, finished, out, n_emit, cache, keys,
+                live, limit, temp, stop_ids, buf_len=buf_len)
+
+            # harvest — the only host<->device result transfers per yield
+            fin_np = np.asarray(finished)
+            n_np = np.asarray(n_emit)
+            out_np = np.asarray(out)
+            pos = int(cache["pos"])
+            self.usage.host_transfers += 4
+            done_rows = [r for r in range(slots)
+                         if row_job[r] >= 0 and fin_np[r]]
+            for r in done_rows:
+                j = row_job[r]
+                text = self.tokenizer.decode(out_np[r, :int(n_np[r])])
+                results[j] = text.split(stop)[0] if stop else text
+                total_decode += int(n_np[r])
+                row_job[r] = -1
+                self.usage.finished_jobs += 1
+                self.usage.record("finish", j, pos, r)
+            if done_rows:
+                live = live.at[jnp.asarray(done_rows, jnp.int32)].set(False)
+
+        self.usage.add(total_prefill, total_decode)
+        return [t if t is not None else "" for t in results]
 
     # ------------------------------------------------------------------
     def generate(self, prompt: str, **kw) -> str:

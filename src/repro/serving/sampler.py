@@ -19,6 +19,33 @@ def sample_traced(logits: jnp.ndarray, key, temperature, *, greedy: bool,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def split_rows(keys: jnp.ndarray):
+    """Advance a (B, 2) uint32 batch of per-row PRNG lanes one step.
+
+    Returns ``(new_keys, subkeys)`` — each (B, 2).  Each row evolves as an
+    independent RNG stream, so a row's sample sequence is a function of its
+    own lane only: the continuous-batching engine can admit/retire
+    neighbouring rows without perturbing the tokens a live row draws."""
+    both = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return both[:, 0], both[:, 1]
+
+
+def sample_rows(logits: jnp.ndarray, keys, temperature) -> jnp.ndarray:
+    """Per-row sampler for the slot-based serve loop.
+
+    ``temperature`` is a traced (B,) vector — rows with temperature <= 0
+    decode greedily while their neighbours sample stochastically, all inside
+    one executable (no static greedy flag, unlike :func:`sample_traced`).
+    ``keys`` is the (B, 2) per-row lane array from :func:`split_rows`."""
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    scaled = (logits.astype(jnp.float32)
+              / jnp.maximum(temperature, 1e-6)[:, None])
+    stoch = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row))(keys, scaled)
+    return jnp.where(temperature <= 0.0, greedy_tok, stoch.astype(jnp.int32))
+
+
 def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
            top_k: int = 0) -> jnp.ndarray:
     """logits: (B, V) -> (B,) int32.  ``temperature`` must be a concrete

@@ -1,23 +1,27 @@
-"""Job batch scheduler — the "execute locally in parallel" MinionS step.
+"""Job scheduler — the "execute locally in parallel" MinionS step.
 
-Takes an arbitrary number of worker prompts, groups them into engine-sized
-batches (optionally replicating each job ``samples`` times for repeated
-test-time sampling, §6.3), runs them through the local engine, and returns
-results in submission order.
+The single streaming entry point for worker fan-out: protocols (via
+``EngineClient``) ``submit`` jobs — optionally replicating each one
+``samples`` times for repeated test-time sampling, §6.3 — and ``drain``
+runs everything queued through the engine's continuously-batched
+:meth:`InferenceEngine.serve` pool, where length-aware admission streams
+queued jobs into decode rows the moment they free up.  Results always come
+back in submission order.
 
-Jobs are length-sorted before being grouped so that same-batch prompts
-land in the same engine length bucket: a batch of uniformly-short jobs
-pads to a small bucket instead of inheriting the longest outlier's, which
-cuts prefill padding waste even before the engine's packed-prefill path
-kicks in (and feeds that packer near-uniform rows, where first-fit packs
-tightest).
+Wrapping a plain ``generate_fn`` callable (no engine) falls back to the
+legacy convoy path: jobs are length-sorted so same-batch prompts land in
+the same engine length bucket, then run in fixed-size groups.  An
+``InferenceEngine`` — or its bound ``generate_batch`` method — is detected
+and upgraded to the streaming path automatically.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax
+
+from .engine import InferenceEngine
 
 
 @dataclasses.dataclass
@@ -27,32 +31,101 @@ class ScheduledResult:
     text: str
 
 
-class JobScheduler:
-    def __init__(self, generate_fn: Callable[..., List[str]], *,
-                 max_batch: int = 16):
-        """generate_fn: (prompts, temperature=..., key=...) -> texts."""
-        self.generate_fn = generate_fn
-        self.max_batch = max_batch
+@dataclasses.dataclass
+class _Pending:
+    job_index: int
+    prompt: str
+    samples: int
+    temperature: float
+    max_new_tokens: int
 
+
+class JobScheduler:
+    def __init__(self,
+                 target: Union[InferenceEngine, Callable[..., List[str]]],
+                 *, max_batch: int = 16):
+        """``target``: an InferenceEngine (streaming serve pool of
+        ``max_batch`` slots) or a plain ``(prompts, temperature=..., key=...,
+        max_new_tokens=...) -> texts`` callable (legacy grouped batching)."""
+        engine = target if isinstance(target, InferenceEngine) else \
+            getattr(target, "__self__", None)
+        self.engine = engine if isinstance(engine, InferenceEngine) else None
+        self.generate_fn = None if self.engine is not None else target
+        self.max_batch = max_batch
+        self._queue: List[_Pending] = []
+        self._next_job = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: str, *, samples: int = 1,
+               temperature: float = 0.2,
+               max_new_tokens: int = 128) -> int:
+        """Queue one job (``samples`` stochastic repeats); returns its
+        job index.  Nothing runs until :meth:`drain`."""
+        ji = self._next_job
+        self._next_job += 1
+        self._queue.append(_Pending(ji, prompt, samples, temperature,
+                                    max_new_tokens))
+        return ji
+
+    def drain(self, *, seed: int = 0,
+              key=None) -> List[ScheduledResult]:
+        """Run every queued job to completion and return results in
+        submission order.  The queue is left empty and job numbering
+        restarts at 0 (each drain is an independent batch, so
+        ``job_index`` always indexes that batch's submission order).
+        ``key`` overrides the PRNGKey derived from ``seed``."""
+        pending, self._queue = self._queue, []
+        self._next_job = 0
+        expanded = [(p.job_index, si, p)
+                    for p in pending for si in range(p.samples)]
+        if not expanded:
+            return []
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        if self.engine is not None:
+            texts = self.engine.serve(
+                [p.prompt for _, _, p in expanded],
+                max_new_tokens=[p.max_new_tokens for _, _, p in expanded],
+                temperature=[p.temperature for _, _, p in expanded],
+                key=key, slots=self.max_batch)
+            results = [ScheduledResult(ji, si, t)
+                       for (ji, si, _), t in zip(expanded, texts)]
+        else:
+            results = self._drain_grouped(expanded, key)
+        results.sort(key=lambda r: (r.job_index, r.sample_index))
+        return results
+
+    def _drain_grouped(self, expanded, key) -> List[ScheduledResult]:
+        """Legacy convoy batching for plain generate callables: jobs with
+        identical sampling params batch together (a greedy job must never
+        inherit a stochastic neighbour's temperature or budget), and within
+        a param class length-alike jobs share a batch (stable on submission
+        order for equal lengths) so a batch of uniformly-short jobs pads to
+        a small bucket instead of the longest outlier's."""
+        classes = {}
+        for item in expanded:
+            p = item[2]
+            classes.setdefault((p.temperature, p.max_new_tokens),
+                               []).append(item)
+        results: List[ScheduledResult] = []
+        for (t, b), items in classes.items():
+            items = sorted(items, key=lambda it: len(it[2].prompt))
+            for off in range(0, len(items), self.max_batch):
+                group = items[off:off + self.max_batch]
+                key, sub = jax.random.split(key)
+                texts = self.generate_fn(
+                    [p.prompt for _, _, p in group], temperature=t,
+                    key=sub, max_new_tokens=b)
+                for (ji, si, _), text in zip(group, texts):
+                    results.append(ScheduledResult(ji, si, text))
+        return results
+
+    # ------------------------------------------------------------------
     def run(self, prompts: Sequence[str], *, samples: int = 1,
             temperature: float = 0.2, seed: int = 0,
             max_new_tokens: int = 128) -> List[ScheduledResult]:
-        expanded = [(ji, si, p)
-                    for ji, p in enumerate(prompts)
-                    for si in range(samples)]
-        # group length-alike jobs into the same batch (stable on
-        # submission order for equal lengths); results are re-sorted into
-        # submission order below, so callers never observe the reordering
-        expanded.sort(key=lambda t: len(t[2]))
-        results: List[ScheduledResult] = []
-        key = jax.random.PRNGKey(seed)
-        for off in range(0, len(expanded), self.max_batch):
-            group = expanded[off:off + self.max_batch]
-            key, sub = jax.random.split(key)
-            texts = self.generate_fn(
-                [p for _, _, p in group], temperature=temperature, key=sub,
-                max_new_tokens=max_new_tokens)
-            for (ji, si, _), text in zip(group, texts):
-                results.append(ScheduledResult(ji, si, text))
-        results.sort(key=lambda r: (r.job_index, r.sample_index))
-        return results
+        """Submit-all-then-drain convenience wrapper."""
+        for p in prompts:
+            self.submit(p, samples=samples, temperature=temperature,
+                        max_new_tokens=max_new_tokens)
+        return self.drain(seed=seed)

@@ -10,6 +10,8 @@ from repro.serving import ByteTokenizer, InferenceEngine, JobScheduler
 from repro.serving.engine import _bucket, _pack_plan
 from repro.serving.sampler import sample
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine():
@@ -78,6 +80,20 @@ def test_deterministic_greedy(engine):
 def test_too_long_prompt_raises(engine):
     with pytest.raises(ValueError):
         engine.generate_batch(["x" * 5000], max_new_tokens=2)
+
+
+def test_truncate_long_with_non_power_of_two_max_seq_len(engine):
+    """Regression: truncate_long capped prompts at max_seq_len but the
+    bucket then rounded UP past it (cap 200 -> bucket 256 -> ValueError),
+    so graceful degradation raised anyway.  The bucket must clamp."""
+    eng = InferenceEngine(engine.cfg, engine.params, max_seq_len=200,
+                          truncate_long=True)
+    outs = eng.generate_batch(["z" * 500, "short"], max_new_tokens=2)
+    assert len(outs) == 2
+    # and untruncated engines still reject over-long prompts
+    strict = InferenceEngine(engine.cfg, engine.params, max_seq_len=200)
+    with pytest.raises(ValueError):
+        strict.generate_batch(["z" * 500], max_new_tokens=2)
 
 
 def test_scheduler_order_and_samples(engine):
@@ -266,3 +282,196 @@ def test_scheduler_length_sorts_batches():
     lens = [sorted(len(p) for p in b) for b in batches]
     assert lens[0] == [3, 5, 7, 9]          # shorts together
     assert lens[1] == [470, 480, 490, 500]  # longs together
+
+
+# ---------------------------------------------------------------------------
+# fused-loop stop-sequence edges
+# ---------------------------------------------------------------------------
+
+
+def _forced_first(engine, prompt, vocab_token):
+    """Prefill one row and force its first sampled token."""
+    batch, s = engine._prepare_batch([engine.tokenizer.encode(prompt)])
+    logits, cache = engine._prefill(engine.params, batch=batch,
+                                    capacity=_bucket(s + 16 + 256))
+    first = np.full((1, logits.shape[-1]), -1e9, np.float32)
+    first[0, vocab_token] = 0.0
+    return jnp.asarray(first), cache
+
+
+def test_stop_window_clamp_no_false_match_on_early_steps(engine):
+    """At step < n_stop - 1 the rolling window clamps to the buffer start
+    and reads unwritten PAD columns — which must never complete a match.
+    Stop "AA" with first token 'A': the clamped window is [A, PAD], so
+    decode must NOT halt after one token."""
+    first, cache = _forced_first(engine, "clamp edge", ord("A"))
+    out, n = engine._decode_loop(
+        engine.params, first, cache, jax.random.PRNGKey(0),
+        jnp.asarray([ord("A"), ord("A")], jnp.int32), 16, 0.0,
+        buf_len=16, greedy=True)
+    assert int(n) > 1                       # survived the clamped window
+    assert np.asarray(out)[0, 0] == ord("A")
+
+
+def test_stop_longer_than_buffer_is_skipped(engine):
+    """n_stop > buf_len: the on-device check is structurally impossible
+    (fewer emitted tokens than the stop is long), so the loop skips it and
+    decodes to the budget.  Intended divergence from host-side
+    ``text.split(stop)``: a PARTIAL stop prefix at the end of a tiny
+    generation is kept, since split() can't match it either."""
+    first, cache = _forced_first(engine, "tiny budget", ord("A"))
+    stop3 = jnp.asarray([ord("A"), ord("B"), ord("C")], jnp.int32)
+    out, n = engine._decode_loop(
+        engine.params, first, cache, jax.random.PRNGKey(0),
+        stop3, 2, 0.0, buf_len=2, greedy=True)
+    assert int(n) == 2                      # ran to the budget, no stop
+    assert (np.asarray(out)[0, :2] != ByteTokenizer.PAD).all()
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (serve): slot pool + admission
+# ---------------------------------------------------------------------------
+
+
+def test_serve_first_wave_matches_generate_batch(engine):
+    """Jobs admitted at a fresh epoch occupy the same left-padded layout
+    as a generate_batch call, so greedy outputs are identical."""
+    prompts = ["alpha", "beta gamma", "delta epsilon zeta"]
+    assert engine.serve(prompts, max_new_tokens=8, slots=3) == \
+        engine.generate_batch(prompts, max_new_tokens=8)
+
+
+def test_serve_admits_queued_jobs_before_long_job_finishes(engine):
+    """Acceptance: ragged budgets [8, 8, 8, 256] — the short rows free up,
+    queued jobs are admitted into them, and all of that happens while the
+    256-budget job is still decoding (observed via EngineUsage.events)."""
+    e0 = len(engine.usage.events)
+    prompts = [f"ragged job {i}" for i in range(7)]
+    budgets = [8, 8, 8, 256, 8, 8, 8]
+    outs = engine.serve(prompts, max_new_tokens=budgets, slots=4)
+    assert len(outs) == 7 and all(isinstance(o, str) for o in outs)
+    ev = engine.usage.events[e0:]
+    long_finish = next(p for (kind, j, p, _r) in ev
+                       if kind == "finish" and j == 3)
+    late_admits = [p for (kind, j, p, _r) in ev
+                   if kind == "admit" and j >= 4]
+    assert len(late_admits) == 3
+    assert all(p < long_finish for p in late_admits)
+    # and the long job really decoded past the shorts' admission point
+    assert long_finish > max(late_admits)
+
+
+def test_serve_deterministic_and_complete(engine):
+    prompts = [f"determinism {i} " + "x" * (3 * i) for i in range(9)]
+    a = engine.serve(prompts, max_new_tokens=6, slots=4)
+    b = engine.serve(prompts, max_new_tokens=6, slots=4)
+    assert a == b
+    assert len(a) == 9
+
+
+def test_serve_per_row_temperature_lanes(engine):
+    """Greedy rows stay deterministic even when admitted next to
+    stochastic neighbours (per-row temperature + RNG lanes)."""
+    prompts = ["greedy row", "hot row", "another greedy"]
+    temps = [0.0, 1.3, 0.0]
+    mixed = engine.serve(prompts, max_new_tokens=8, temperature=temps,
+                         slots=3)
+    pure = engine.serve(prompts, max_new_tokens=8, temperature=0.0,
+                        slots=3)
+    assert mixed[0] == pure[0]
+    assert mixed[2] == pure[2]
+
+
+def test_serve_counts_usage(engine):
+    adm0, fin0 = engine.usage.admitted_jobs, engine.usage.finished_jobs
+    d0 = engine.usage.decode_tokens
+    engine.serve(["usage a", "usage b"], max_new_tokens=4, slots=2)
+    assert engine.usage.admitted_jobs - adm0 == 2
+    assert engine.usage.finished_jobs - fin0 == 2
+    assert engine.usage.decode_tokens >= d0
+
+
+def test_serve_epoch_reset_when_nothing_fits(engine):
+    """More jobs than one epoch's cache can absorb still all complete —
+    the pool retires the cache and starts a new epoch."""
+    eng = InferenceEngine(engine.cfg, engine.params, max_seq_len=1024,
+                          decode_margin=0)
+    ep0 = eng.usage.serve_epochs
+    outs = eng.serve([f"epoch job {i}" for i in range(6)],
+                     max_new_tokens=128, slots=2)
+    assert len(outs) == 6
+    assert eng.usage.serve_epochs > ep0
+
+
+def test_serve_unservable_config_degrades_to_convoy():
+    """MoE caches have no admissible slot layout: serve falls back to
+    convoy groups but still returns every result."""
+    cfg = get_smoke_config("olmoe-1b-7b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, max_seq_len=256)
+    assert not eng.can_serve
+    outs = eng.serve([f"moe {i}" for i in range(3)], max_new_tokens=2,
+                     slots=2)
+    assert len(outs) == 3
+
+
+# ---------------------------------------------------------------------------
+# streaming scheduler + EngineClient routing
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_upgrades_engine_to_streaming(engine):
+    sched = JobScheduler(engine.generate_batch, max_batch=4)
+    assert sched.engine is engine
+    sched = JobScheduler(engine, max_batch=4)
+    assert sched.engine is engine
+
+
+def test_scheduler_submit_drain(engine):
+    sched = JobScheduler(engine, max_batch=4)
+    ids = [sched.submit(f"stream {i}", samples=1, max_new_tokens=2)
+           for i in range(3)]
+    assert ids == [0, 1, 2]
+    res = sched.drain()
+    assert [(r.job_index, r.sample_index) for r in res] == \
+        [(0, 0), (1, 0), (2, 0)]
+    assert sched.drain() == []              # queue is left empty
+    # job numbering restarts per drain: a reused scheduler (EngineClient
+    # keeps one for its lifetime) must index each batch from 0
+    sched.submit("next batch", max_new_tokens=2)
+    assert [r.job_index for r in sched.drain()] == [0]
+
+
+def test_drain_grouped_isolates_sampling_params():
+    """Plain-callable fallback: jobs batch only with param-identical
+    neighbours — a greedy job must not inherit a stochastic sibling's
+    temperature or token budget."""
+    seen = []
+
+    def fake_generate(prompts, temperature=0.0, key=None, max_new_tokens=0):
+        seen.append((temperature, max_new_tokens, list(prompts)))
+        return ["" for _ in prompts]
+
+    sched = JobScheduler(fake_generate, max_batch=8)
+    sched.submit("greedy", temperature=0.0, max_new_tokens=4)
+    sched.submit("hot", temperature=0.9, max_new_tokens=64)
+    sched.submit("greedy 2", temperature=0.0, max_new_tokens=4)
+    sched.drain()
+    assert sorted(seen) == [
+        (0.0, 4, ["greedy", "greedy 2"]), (0.9, 64, ["hot"])]
+
+
+def test_engine_client_ragged_batch_cuts_prefill_padding(engine):
+    """EngineClient now streams through the scheduler: a ragged MinionS
+    round must burn fewer padded prefill slots than the old fixed
+    submission-order slices (EngineUsage.prefill_slots)."""
+    from repro.core.clients import EngineClient
+    prompts = ["a" * 10] * 7 + ["b" * 300]
+    eng_s = InferenceEngine(engine.cfg, engine.params, max_seq_len=1024,
+                            pack_jobs=False)
+    eng_c = InferenceEngine(engine.cfg, engine.params, max_seq_len=1024,
+                            pack_jobs=False)
+    EngineClient(eng_s, max_batch=4).complete_batch(prompts, max_tokens=4)
+    for off in range(0, len(prompts), 4):    # the deleted convoy slicing
+        eng_c.generate_batch(prompts[off:off + 4], max_new_tokens=4)
+    assert eng_s.usage.prefill_slots < eng_c.usage.prefill_slots

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import chunked_prefill, gqa_decode
 from repro.kernels.ref import chunked_prefill_ref, gqa_decode_ref
 
+pytestmark = pytest.mark.slow
+
 
 def _rand(key, shape, dtype):
     x = jax.random.normal(key, shape, jnp.float32)

@@ -9,6 +9,8 @@ from repro.models import transformer as T
 from repro.training import AdamWConfig
 from repro.training.train_loop import init_state, make_train_step
 
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

@@ -12,6 +12,8 @@ from repro.models.layers import blocked_attention, dense_attention
 from repro.training import AdamWConfig
 from repro.training.train_loop import init_state, make_train_step
 
+pytestmark = pytest.mark.slow
+
 
 def _params_pair(cfg):
     params = T.init_params(cfg, jax.random.PRNGKey(0))

@@ -126,3 +126,27 @@ def test_scratchpad_carries_found_facts():
                     MinionSConfig(max_rounds=3,
                                   context_strategy="scratchpad"))
     assert r.answer is not None
+
+
+class _ProseRemote:
+    """Remote whose synthesize step answers in prose, not JSON — the
+    decompose step still emits runnable code (delegated to ScriptedRemote)."""
+    name = "prose-remote"
+
+    def __init__(self):
+        self._inner = ScriptedRemote(seed=0)
+
+    def complete(self, prompt, **kw):
+        if "synthesize" in prompt.lower() or "final" in prompt.lower():
+            return "The total revenue was 42.0 million dollars."
+        return self._inner.complete(prompt, **kw)
+
+
+def test_forced_final_round_falls_back_to_raw_synthesize_text():
+    """Regression: when the final synthesize response isn't parseable JSON
+    (or lacks an "answer" key), run_minions must return the raw text
+    instead of silently answering None."""
+    t = make_task(8, n_pages=5, kind="extract")
+    r = run_minions(LOCAL, _ProseRemote(), t.context, t.query,
+                    MinionSConfig(max_rounds=1))
+    assert r.answer == "The total revenue was 42.0 million dollars."

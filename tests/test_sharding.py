@@ -10,6 +10,8 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import transformer as T
 from repro.parallel import batch_specs, cache_specs, param_specs
 
+pytestmark = pytest.mark.slow
+
 
 class FakeMesh:
     """Axis-size stand-in so divisibility rules can be tested without 512

@@ -13,6 +13,8 @@ from repro.core.tasks import make_task
 from repro.models import transformer as T
 from repro.serving import InferenceEngine
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine_client():

@@ -13,6 +13,8 @@ from repro.training.data import make_worker_example
 from repro.training.optimizer import schedule
 import random
 
+pytestmark = pytest.mark.slow
+
 
 def test_loss_decreases():
     cfg = get_smoke_config("llama3.2-1b")
