@@ -1,0 +1,27 @@
+# Developer entry points.  All targets force 8 logical host devices so
+# the mesh-sharded serving tests exercise a real data x model layout on
+# any machine (tests/conftest.py applies the same default under bare
+# pytest); override with XLA_HOST_DEVICES=1 to pin single-device.
+XLA_HOST_DEVICES ?= 8
+# merge (not replace) any XLA flags already in the developer's shell
+export XLA_FLAGS := $(XLA_FLAGS) --xla_force_host_platform_device_count=$(XLA_HOST_DEVICES)
+export PYTHONPATH := src
+
+PYTEST ?= python -m pytest
+
+.PHONY: smoke full bench
+
+# sub-minute loop: everything not marked slow (includes the 2-cell
+# equivalence smoke subset)
+smoke:
+	$(PYTEST) -q -m "not slow"
+
+# the whole suite, including the cross-backend equivalence grid
+full:
+	$(PYTEST) -q
+
+# engine benchmark scenarios (fused decode, packing, continuous batching,
+# sharded-vs-single-device serve); rewrites BENCH_engine.json and
+# experiments/bench_results.csv
+bench:
+	python -m benchmarks.run --only engine

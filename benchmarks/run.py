@@ -344,8 +344,48 @@ def engine_bench(n_tasks: int):
             "decode_tokens": int(decoded),
             "useful_tokens": useful}
 
+    # --- sharded vs single-device serve on the host mesh ----------------
+    # Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to get
+    # an 8-device host mesh on CPU.  Decode rows shard over the "data"
+    # axis; the figure of merit is useful tok/s plus the token-identity
+    # and host-transfer-parity observables (on forced host devices the
+    # shards share the same cores, so wall-clock measures SPMD partition
+    # overhead — the throughput win needs real parallel hardware).
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        from repro.launch.mesh import make_host_mesh
+        sprompts = [f"shard job {i}: extract: " + "doc " * (3 * (i % 6))
+                    for i in range(16)]
+        sbudgets = [8, 8, 8, 48] * 4
+        s_useful = sum(sbudgets)
+        s_slots = 8
+        outs = {}
+        for mode, mesh in (("single", None), ("sharded", make_host_mesh(1))):
+            eng = InferenceEngine(cfg, params, max_seq_len=1024, mesh=mesh)
+            eng.serve(sprompts, max_new_tokens=sbudgets, slots=s_slots)
+            d0, h0 = eng.usage.decode_tokens, eng.usage.host_transfers
+            t0 = time.time()
+            outs[mode] = eng.serve(sprompts, max_new_tokens=sbudgets,
+                                   slots=s_slots)
+            dt = time.time() - t0
+            tok_s = s_useful / max(dt, 1e-9)
+            transfers = eng.usage.host_transfers - h0
+            emit(f"engine/serve_{mode}_{n_dev}dev", dt * 1e6,
+                 f"useful_tok_per_s={tok_s:.1f};transfers={transfers}")
+            baseline[f"serve_{mode}"] = {
+                "useful_tok_per_s": round(tok_s, 1),
+                "decode_tokens": int(eng.usage.decode_tokens - d0),
+                "host_transfers": int(transfers)}
+        baseline["serve_sharded"]["devices"] = n_dev
+        baseline["serve_sharded"]["token_identical_to_single"] = \
+            outs["sharded"] == outs["single"]
+
+    # the device layout is part of the baseline's identity: forcing N
+    # logical host devices splits the CPU N ways, so throughput numbers
+    # are only comparable across runs with the same "devices" value
     with open("BENCH_engine.json", "w") as f:
-        json.dump({"config": cfg.name, "n_jobs": len(prompts),
+        json.dump({"config": cfg.name, "devices": n_dev,
+                   "n_jobs": len(prompts),
                    "max_new_tokens": max_new, "ragged_budgets": budgets,
                    "ragged_slots": slots, **baseline}, f, indent=2)
         f.write("\n")

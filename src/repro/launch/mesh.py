@@ -18,8 +18,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_parallel: int = 1):
-    """Whatever this host actually has (smoke tests / examples)."""
+    """Whatever this host actually has (smoke tests / examples / the
+    serving engine's default mesh).
+
+    A ("data", "model") mesh over every local device: serving shards
+    decode rows over "data" and attention heads over "model".  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get 8
+    logical CPU devices for mesh tests on a laptop."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if n % model_parallel != 0:
+        raise ValueError(
+            f"model_parallel={model_parallel} does not divide the "
+            f"{n} available devices")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))

@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         [--checkpoint out/ckpt.npz] --prompts "hello" "world"
 
+Mesh-sharded serving: ``--sharded`` builds the host mesh
+(:func:`repro.launch.mesh.make_host_mesh`) and shards the engine over it
+(``--model-parallel N`` splits attention heads over a "model" axis; the
+remaining devices form the "data" axis that decode rows shard over).  Run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to smoke-test
+an 8-device layout on CPU.  ``--serve`` routes the prompts through the
+continuously-batched slot pool instead of one convoy ``generate_batch``.
+
 This is the LocalLM side of the MinionS deployment; the protocol drivers in
 examples/ compose it with a remote client.
 """
@@ -19,14 +27,17 @@ from repro.training import load
 
 
 def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
-                 max_seq_len: int = 4096, seed: int = 0) -> InferenceEngine:
+                 max_seq_len: int = 4096, seed: int = 0,
+                 mesh=None) -> InferenceEngine:
+    """``mesh``: None (single device), a ``jax.sharding.Mesh``, or
+    ``"auto"`` for the host mesh — passed straight through to the engine."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     cfg = cfg.replace(vocab_size=max(512, min(cfg.vocab_size, 512)))
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
     if checkpoint:
         params, meta = load(checkpoint, params)
         print(f"loaded checkpoint ({meta})")
-    return InferenceEngine(cfg, params, max_seq_len=max_seq_len)
+    return InferenceEngine(cfg, params, max_seq_len=max_seq_len, mesh=mesh)
 
 
 def main():
@@ -36,15 +47,35 @@ def main():
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--max-new-tokens", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.2)
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the engine over the local host mesh")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="'model' axis size of the host mesh (with "
+                         "--sharded); must divide the device count")
+    ap.add_argument("--serve", action="store_true",
+                    help="continuously-batched slot pool instead of one "
+                         "convoy generate_batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode rows in the serve pool (with --serve)")
     ap.add_argument("--prompts", nargs="+",
                     default=["The total revenue for fiscal year 2015 was"])
     args = ap.parse_args()
 
+    mesh = None
+    if args.sharded:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.model_parallel)
+        print(f"mesh: {dict(mesh.shape)}")
     engine = build_engine(args.arch, smoke=args.smoke,
-                          checkpoint=args.checkpoint)
-    outs = engine.generate_batch(args.prompts,
-                                 max_new_tokens=args.max_new_tokens,
-                                 temperature=args.temperature)
+                          checkpoint=args.checkpoint, mesh=mesh)
+    if args.serve:
+        outs = engine.serve(args.prompts,
+                            max_new_tokens=args.max_new_tokens,
+                            temperature=args.temperature, slots=args.slots)
+    else:
+        outs = engine.generate_batch(args.prompts,
+                                     max_new_tokens=args.max_new_tokens,
+                                     temperature=args.temperature)
     for p, o in zip(args.prompts, outs):
         print(f">>> {p!r}\n{o!r}\n")
     print(f"usage: {engine.usage}")

@@ -1,5 +1,5 @@
-from .sharding import (batch_specs, cache_specs, data_axes, opt_state_specs,
-                       param_specs, to_shardings)
+from .sharding import (batch_specs, cache_specs, data_axes, data_axis_size,
+                       opt_state_specs, param_specs, row_specs, to_shardings)
 
-__all__ = ["batch_specs", "cache_specs", "data_axes", "opt_state_specs",
-           "param_specs", "to_shardings"]
+__all__ = ["batch_specs", "cache_specs", "data_axes", "data_axis_size",
+           "opt_state_specs", "param_specs", "row_specs", "to_shardings"]

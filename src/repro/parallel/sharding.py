@@ -55,6 +55,12 @@ def data_axes(mesh: Mesh, pure_dp: bool = False) -> Tuple[str, ...]:
     return axes + ("model",) if pure_dp else axes
 
 
+def data_axis_size(mesh: Mesh) -> int:
+    """Product of the data-parallel axis sizes (the row-sharding granule:
+    serving batches and slot pools place whole rows across these axes)."""
+    return _axis_size(mesh, data_axes(mesh))
+
+
 def _tp_flags(mesh: Mesh, cfg: ModelConfig,
               decode: bool = False) -> Tuple[bool, bool]:
     """(q-head TP possible, kv-head TP possible) on this mesh.
@@ -208,6 +214,28 @@ def batch_specs(mesh: Mesh, cfg: ModelConfig, batch_shape,
         return P(b_axis, *rest)
 
     return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def row_specs(mesh: Mesh, tree) -> Any:
+    """Per-row serving lane specs (tok / done / emit-cursor / RNG-lane /
+    budget / temperature arrays of the slot-pool decode loop).
+
+    Every lane is (B,) or (B, X) with one entry per decode row, so the
+    leading axis shards over the data axes whenever it divides — the same
+    granule the KV cache's batch axis uses, keeping each row's sampler
+    state resident on the shard that owns the row's cache.  Non-divisible
+    pools replicate (never force GSPMD into involuntary resharding)."""
+    da = data_axes(mesh)
+    da_size = _axis_size(mesh, da)
+
+    def rule(leaf):
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return P()
+        b_axis = da if shape[0] % da_size == 0 else None
+        return P(b_axis, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(rule, tree)
 
 
 # ===========================================================================

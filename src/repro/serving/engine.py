@@ -28,6 +28,37 @@ state, temperature and RNG lane, so admissions never recompile and never
 perturb what a live neighbour row samples.  Host transfers stay O(number
 of admissions), not O(tokens); one long job no longer convoys its
 siblings.
+
+Sharded serving (``mesh=``): the same hot path runs SPMD over a JAX
+("data", "model") mesh — pass a ``jax.sharding.Mesh`` (or ``"auto"`` for
+:func:`repro.launch.mesh.make_host_mesh` over every local device).  The
+layout, from the rules in :mod:`repro.parallel.sharding`:
+
+  params      param_specs(..., decode=True): q/kv head dims over "model"
+              when they divide, flat weight sharding otherwise; placed
+              once at construction.
+  batch rows  batch_specs: prefill token/segment/position rows over the
+              data axes when the row count divides, else replicated.
+  cache       cache_specs: batch(row) axis over "data", KV heads over
+              "model" when divisible (flash-decode sequence sharding as
+              the documented fallback — it reorders float reductions, so
+              bit-identity with single-device is only guaranteed for
+              row-aligned pools).
+  lanes       row_specs: per-row sampler state (tok / done / emit cursor /
+              RNG lane / budget / temperature) shards with the rows it
+              serves, so admission scatters touch only the owning shard.
+
+Everything else is unchanged: prefill/decode loops are jitted once and
+GSPMD partitions them from the committed input shardings (computation
+follows data), and slot admission stays O(admissions) — primed KV is
+scattered into the live sharded cache on device, never gathered to host.
+
+Equivalence-test matrix (tests/test_equivalence.py): every execution path
+the engine has grown — {reference, pallas} backend x {generate_batch,
+serve} x {packed, unpacked} prefill x {single-device, 8-device host mesh}
+— must produce token-identical greedy output for identical seeds; the
+differential harness pins all cells to the single-device reference
+unpacked oracle.
 """
 from __future__ import annotations
 
@@ -38,16 +69,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     row_specs, to_shardings)
 
-from .sampler import sample_rows, sample_traced, split_rows
+from .sampler import job_keys, sample_rows, sample_traced, split_rows
 from .tokenizer import ByteTokenizer
 
 
 @dataclasses.dataclass
 class EngineUsage:
+    """Cumulative usage accounting for one engine.
+
+    Counters accumulate over the engine's LIFETIME (like a billing meter):
+    callers wanting per-call figures snapshot before/after and diff, or
+    call :meth:`reset` between phases.  They are deliberately NOT cleared
+    between ``serve``/``generate_batch`` calls — a MinionS protocol round
+    spans many engine calls and meters the total."""
+
     prefill_tokens: int = 0
     decode_tokens: int = 0
     calls: int = 0
@@ -81,12 +123,27 @@ class EngineUsage:
         self.decode_tokens += decode
         self.calls += 1
 
+    def reset(self):
+        """Zero every counter and drop the event log (fresh billing
+        period for a reused engine)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default_factory()
+                    if f.default_factory is not dataclasses.MISSING
+                    else f.default)
+
 
 def _bucket(n: int, minimum: int = 64) -> int:
     b = minimum
     while b < n:
         b *= 2
     return b
+
+
+def _bucket_clamped(n: int, max_seq_len: int, minimum: int = 64) -> int:
+    # clamp: _bucket rounds up, so a non-power-of-two max_seq_len
+    # (cap 3000 -> bucket 4096) must not push a batch past the limit
+    # callers (and _truncate) enforce
+    return min(_bucket(n, minimum), max_seq_len)
 
 
 def _pack_plan(lens: Sequence[int], row_cap: int) -> List[List[int]]:
@@ -244,13 +301,32 @@ class InferenceEngine:
     batches on supported configs (pure-attention decoder, no sliding
     window, no layer scan); unsupported configs or batches with nothing to
     gain fall back to one job per row transparently.
+
+    ``mesh`` shards the whole hot path SPMD (see the module docstring for
+    the layout): ``None`` keeps the single-device fast path, a
+    ``jax.sharding.Mesh`` shards over it, and ``"auto"`` builds the
+    default :func:`repro.launch.mesh.make_host_mesh` over every local
+    device.  Params are placed once here; caches, prefill batches and
+    per-row sampler lanes are committed to their shardings as they are
+    created, and the jitted loops partition from there (computation
+    follows data — admission scatters never gather the cache to host).
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  tokenizer: Optional[ByteTokenizer] = None,
                  max_seq_len: int = 4096, decode_margin: int = 256,
-                 truncate_long: bool = False, pack_jobs: bool = True):
+                 truncate_long: bool = False, pack_jobs: bool = True,
+                 mesh: "Mesh | str | None" = None):
         self.cfg = cfg
+        if mesh == "auto":
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        elif isinstance(mesh, str):
+            raise ValueError(f"mesh must be a Mesh, 'auto' or None: {mesh!r}")
+        self.mesh = mesh
+        if mesh is not None:
+            params = jax.device_put(params, to_shardings(
+                mesh, param_specs(mesh, params, cfg, decode=True)))
         self.params = params
         self.tokenizer = tokenizer or ByteTokenizer()
         self.max_seq_len = max_seq_len
@@ -301,11 +377,33 @@ class InferenceEngine:
         return self.pack_jobs and self.can_serve
 
     # ------------------------------------------------------------------
+    # mesh placement: commit arrays to their canonical shardings.  Each
+    # helper is a no-op on a single-device engine; on a sharded engine it
+    # is called O(1) per prefill / epoch (device-to-device placement,
+    # never a host gather), so serve stays O(admissions).
+    def _shard_batch(self, batch):
+        if self.mesh is None:
+            return batch
+        return jax.device_put(batch, to_shardings(
+            self.mesh, batch_specs(self.mesh, self.cfg, batch)))
+
+    def _shard_cache(self, cache):
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, to_shardings(
+            self.mesh, cache_specs(self.mesh, self.cfg, cache)))
+
+    def _shard_rows(self, tree):
+        """Per-row lanes (first-logits rows, sampler state) follow the
+        decode rows across the data axes."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, to_shardings(
+            self.mesh, row_specs(self.mesh, tree)))
+
+    # ------------------------------------------------------------------
     def _bucket_clamped(self, n: int) -> int:
-        # clamp: _bucket rounds up, so a non-power-of-two max_seq_len
-        # (cap 3000 -> bucket 4096) must not push a batch past the limit
-        # callers (and _truncate) enforce
-        return min(_bucket(n), self.max_seq_len)
+        return _bucket_clamped(n, self.max_seq_len)
 
     def _bucket_checked(self, prompt_ids: Sequence[Sequence[int]]) -> int:
         max_len = max(len(p) for p in prompt_ids)
@@ -370,9 +468,9 @@ class InferenceEngine:
                 job_row[i], job_off[i] = r, off
                 off += ln
 
-        batch = {"tokens": jnp.asarray(toks),
-                 "segment_ids": jnp.asarray(segs),
-                 "positions": jnp.asarray(poss)}
+        batch = self._shard_batch({"tokens": jnp.asarray(toks),
+                                   "segment_ids": jnp.asarray(segs),
+                                   "positions": jnp.asarray(poss)})
         _, cache_p, hidden = self._prefill_hidden(
             self.params, batch=batch, capacity=s_job)
 
@@ -448,11 +546,16 @@ class InferenceEngine:
                 prompt_ids, plan, s_job, max_new_tokens)
         else:
             batch, s = self._prepare_batch(prompt_ids, s_job)
+            batch = self._shard_batch(batch)
             capacity = _bucket(s + max_new_tokens + self.decode_margin)
             logits, cache = self._prefill(self.params, batch=batch,
                                           capacity=capacity)
             first_logits = logits[:, -1]
             self.usage.prefill_slots += int(batch["tokens"].size)
+        # commit the decode state to its canonical mesh layout (no-op on a
+        # single-device engine): rows over "data", KV heads over "model"
+        cache = self._shard_cache(cache)
+        first_logits = self._shard_rows(first_logits)
 
         stop_ids = jnp.asarray(
             self.tokenizer.encode(stop, bos=False) if stop else [],
@@ -500,6 +603,12 @@ class InferenceEngine:
         cache is retired and a fresh epoch starts.  Configs whose caches
         have no slot axis (see :attr:`can_serve`) degrade to convoy batches
         of ``slots`` jobs.
+
+        On a sharded engine the pool's rows (cache + sampler lanes) are
+        distributed over the mesh's data axes and admission scatters run
+        on device against the live sharded cache; ``slots`` is rounded up
+        to a whole multiple of the data-axis size so every shard owns
+        whole rows (surplus rows just stay non-live).
         """
         n = len(prompts)
         if n == 0:
@@ -528,6 +637,14 @@ class InferenceEngine:
 
         pad = ByteTokenizer.PAD
         slots = max(1, min(slots, n))
+        if self.mesh is not None:
+            # round the pool up to whole rows per data shard: a 4-slot
+            # pool on an 8-way data axis would fall into the
+            # sequence-sharded cache fallback (reordered reductions, no
+            # bit-identity guarantee); surplus rows just stay non-live
+            from repro.parallel.sharding import data_axis_size
+            da = data_axis_size(self.mesh)
+            slots = -(-slots // da) * da
         prompt_ids = self._truncate(
             [self.tokenizer.encode(p) for p in prompts])
         self._bucket_checked(prompt_ids)     # raise early on over-long jobs
@@ -591,8 +708,7 @@ class InferenceEngine:
                 mrows[i, pos - ln:pos] = True
             cache["slot_mask"] = cache["slot_mask"].at[rows_arr].set(
                 jnp.asarray(mrows))
-            jkeys = jnp.stack([jax.random.fold_in(key, j) for j in jids])
-            jkeys, sub = split_rows(jkeys)
+            jkeys, sub = split_rows(job_keys(key, jids))
             jtemp = jnp.asarray([temps[j] for j in jids], jnp.float32)
             tok = tok.at[rows_arr].set(sample_rows(first_logits, sub, jtemp))
             finished = finished.at[rows_arr].set(False)
@@ -619,6 +735,7 @@ class InferenceEngine:
                 cache = T.init_cache(self.cfg, slots, cap)
                 pos = s0
                 cache["pos"] = jnp.asarray(pos, jnp.int32)
+                cache = self._shard_cache(cache)
                 tok = jnp.zeros((slots,), jnp.int32)
                 finished = jnp.ones((slots,), bool)
                 live = jnp.zeros((slots,), bool)
@@ -627,6 +744,10 @@ class InferenceEngine:
                 keys = jnp.zeros((slots, 2), jnp.uint32)
                 limit = jnp.zeros((slots,), jnp.int32)
                 temp = jnp.zeros((slots,), jnp.float32)
+                # per-row sampler lanes shard with the rows they serve
+                (tok, finished, live, out, n_emit, keys, limit,
+                 temp) = self._shard_rows((tok, finished, live, out,
+                                           n_emit, keys, limit, temp))
                 row_job = [-1] * slots
                 for g_rows, g_jids in admission_groups(
                         list(range(len(first))), first):

@@ -19,6 +19,17 @@ def sample_traced(logits: jnp.ndarray, key, temperature, *, greedy: bool,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def job_keys(key, job_ids) -> jnp.ndarray:
+    """Derive one RNG lane per job: ``fold_in(key, j)`` for each global
+    job index ``j`` -> (n_jobs, 2) uint32.
+
+    A job's lane is a function of the serve call's key and its OWN index
+    only — never of which slot row it lands in, when it is admitted, or
+    who its pool neighbours are — so continuous-batching admission order
+    and mesh sharding cannot perturb what a stochastic job samples."""
+    return jnp.stack([jax.random.fold_in(key, j) for j in job_ids])
+
+
 def split_rows(keys: jnp.ndarray):
     """Advance a (B, 2) uint32 batch of per-row PRNG lanes one step.
 

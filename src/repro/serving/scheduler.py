@@ -13,6 +13,11 @@ legacy convoy path: jobs are length-sorted so same-batch prompts land in
 the same engine length bucket, then run in fixed-size groups.  An
 ``InferenceEngine`` — or its bound ``generate_batch`` method — is detected
 and upgraded to the streaming path automatically.
+
+Mesh-sharded engines need no scheduler-side handling: ``serve`` itself
+widens the ``max_batch`` slot pool to whole decode rows per data shard
+(see :meth:`InferenceEngine.serve`), so the streaming path stays
+row-aligned on any mesh.
 """
 from __future__ import annotations
 

@@ -1,0 +1,125 @@
+"""Property-test harness: `hypothesis` when installed, a seeded-sampling
+fallback otherwise.
+
+tests/test_property.py used to ``importorskip`` hypothesis, which silently
+skipped EVERY system invariant on machines without it (including CI
+images where it isn't baked in).  This shim keeps the real hypothesis
+behaviour — shrinking, example databases, coverage-guided generation —
+whenever the library is present, and otherwise substitutes a deterministic
+random sampler over the same strategy combinators: each ``@given`` test
+runs ``max_examples`` (default 25) cases drawn from a PRNG seeded by the
+test's own name, so failures reproduce run-to-run.
+
+Only the strategy subset the test-suite actually uses is implemented:
+integers, floats, booleans, text, lists, tuples, dictionaries,
+sampled_from, one_of, none.
+"""
+from __future__ import annotations
+
+import random as _random_mod
+import zlib
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 25
+    # unicode sample biased toward tokenizer-hostile shapes: multi-byte
+    # UTF-8, controls, surrogpairs-free astral plane
+    _ALPHABET = ("abcdefghij KLMNOP0123456789_-.,:;!?"
+                 "\n\t\"'{}[]()éüñßæ漢字数Ωπ\U0001d518\U0001f600")
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2**63 - 1):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda r: None)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda r: r.choice(seq))
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(lambda r: r.choice(strategies).draw(r))
+
+        @staticmethod
+        def text(alphabet=_ALPHABET, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return "".join(r.choice(alphabet) for _ in range(n))
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return {keys.draw(r): values.draw(r) for _ in range(n)}
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n_examples = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+
+            # zero-arg wrapper (not functools.wraps: copying the wrapped
+            # signature would make pytest resolve the drawn parameters as
+            # fixtures)
+            def runner():
+                rng = _random_mod.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n_examples):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    try:
+                        fn(*drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (case {i}, seeded "
+                            f"fallback sampler): {drawn!r}") from e
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.pytestmark = list(getattr(fn, "pytestmark", []))
+            return runner
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

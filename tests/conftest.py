@@ -1,0 +1,17 @@
+"""Test-session bootstrap: force 8 logical host devices BEFORE jax
+initialises, so the mesh-sharded serving tests (tests/test_equivalence.py,
+tests/test_sharding.py) exercise a real 8-device data x model layout on
+any machine.  Single-device tests are unaffected — unsharded computations
+still run on device 0.
+
+Must run at conftest import time (pytest imports conftest before any test
+module), and must not import jax itself: the flag only takes effect if it
+is in the environment when the jax backend first initialises.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+_xla_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _xla_flags:
+    os.environ["XLA_FLAGS"] = (_xla_flags + " " if _xla_flags else "") \
+        + _FLAG + "=8"

@@ -442,6 +442,85 @@ def test_scheduler_submit_drain(engine):
     assert [r.job_index for r in sched.drain()] == [0]
 
 
+def test_scheduler_drain_independent_of_submission_order(engine):
+    """Length-aware admission must not make results depend on the order
+    jobs were interleaved into the queue: for a fixed seed and greedy
+    sampling, each prompt's text is identical under any submission
+    permutation (and results always return in that permutation's
+    submission order)."""
+    prompts = [f"order job {i} " + "z" * (7 * i % 23) for i in range(9)]
+    prompts[4] = prompts[2]                 # equal lengths tie-break too
+    budgets = [6, 6, 24, 6, 24, 6, 6, 6, 6]
+
+    def run(order):
+        sched = JobScheduler(engine, max_batch=4)
+        for j in order:
+            sched.submit(prompts[j], max_new_tokens=budgets[j],
+                         temperature=0.0)
+        res = sched.drain(seed=0)
+        return {order[r.job_index]: r.text for r in res}
+
+    base = run(list(range(9)))
+    for order in ([8, 7, 6, 5, 4, 3, 2, 1, 0],
+                  [3, 0, 7, 1, 8, 2, 5, 6, 4]):
+        assert run(order) == base
+
+
+def test_serve_rounds_slots_up_to_mesh_data_axis(engine):
+    """A sharded engine's slot pool must place whole rows on every data
+    shard: serve widens a 4-slot request to the 8-way data axis (visible
+    in the admit events: the first wave fills rows 0..7), and the output
+    still matches the single-device engine."""
+    from repro.launch.mesh import make_host_mesh
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    sharded = InferenceEngine(engine.cfg, engine.params, max_seq_len=1024,
+                              mesh=make_host_mesh(1))
+    prompts = [f"round up {i}" for i in range(9)]
+    e0 = len(sharded.usage.events)
+    out = sharded.serve(prompts, max_new_tokens=4, slots=4)
+    first_wave = [r for (kind, _j, _p, r) in sharded.usage.events[e0:e0 + 8]
+                  if kind == "admit"]
+    assert sorted(first_wave) == list(range(8))   # pool widened 4 -> 8
+    assert out == engine.serve(prompts, max_new_tokens=4, slots=4)
+
+
+# ---------------------------------------------------------------------------
+# EngineUsage lifetime semantics
+# ---------------------------------------------------------------------------
+
+
+def test_usage_accumulates_across_serve_calls_and_resets(engine):
+    """Regression for the reused-engine accounting surprise: counters are
+    CUMULATIVE across serve calls (documented billing-meter semantics, a
+    second serve must not silently restart them at zero), and reset()
+    starts a fresh billing period including the event log."""
+    eng = InferenceEngine(engine.cfg, engine.params, max_seq_len=1024)
+    eng.serve(["usage one", "usage two"], max_new_tokens=4, slots=2)
+    first = (eng.usage.admitted_jobs, eng.usage.finished_jobs,
+             eng.usage.prefill_tokens, eng.usage.host_transfers)
+    assert first[0] == 2 and first[1] == 2
+    eng.serve(["usage three", "usage four"], max_new_tokens=4, slots=2)
+    assert eng.usage.admitted_jobs == 4          # accumulated, not reset
+    assert eng.usage.finished_jobs == 4
+    assert eng.usage.prefill_tokens > first[2]
+    assert eng.usage.host_transfers > first[3]
+    assert len(eng.usage.events) == 8            # 4 admits + 4 finishes
+
+    eng.usage.reset()
+    assert eng.usage.admitted_jobs == 0
+    assert eng.usage.finished_jobs == 0
+    assert eng.usage.prefill_tokens == 0
+    assert eng.usage.decode_tokens == 0
+    assert eng.usage.host_transfers == 0
+    assert eng.usage.serve_epochs == 0
+    assert eng.usage.calls == 0
+    assert eng.usage.events == []
+    # and the engine keeps metering correctly after the reset
+    eng.serve(["after reset"], max_new_tokens=4, slots=1)
+    assert eng.usage.admitted_jobs == 1
+
+
 def test_drain_grouped_isolates_sampling_params():
     """Plain-callable fallback: jobs batch only with param-identical
     neighbours — a greedy job must not inherit a stochastic sibling's

@@ -1,12 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests on system invariants.
+
+Runs under real `hypothesis` when installed; otherwise the seeded-sampling
+fallback in tests/_hypothesis_compat.py draws deterministic pseudo-random
+examples from the same strategy expressions — the invariants are never
+silently skipped (they used to be, behind an importorskip)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost import CostModel
 from repro.core.latency import (GPUSpec, LMShape, minions_latency_ratio,
@@ -16,6 +19,7 @@ from repro.core.types import JobOutput, Usage, extract_json
 from repro.core.filtering import filter_outputs
 from repro.core.chunking import chunk_by_chars, chunk_on_multiple_pages
 from repro.models.layers import blocked_attention, dense_attention
+from repro.serving.engine import _bucket, _bucket_clamped, _pack_plan
 from repro.serving.tokenizer import ByteTokenizer
 
 cm = CostModel()
@@ -139,10 +143,76 @@ def test_extract_json_finds_embedded_object(d, prefix, suffix):
 
 
 # --------------------------------------------------------------------------
+# engine job packing: first-fit-decreasing bin packing invariants
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=30),
+       st.integers(64, 256))
+def test_pack_plan_places_every_job_exactly_once(lens, row_cap):
+    plan = _pack_plan(lens, row_cap)
+    assert sorted(i for row in plan for i in row) == list(range(len(lens)))
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=30),
+       st.integers(64, 256))
+def test_pack_plan_rows_never_exceed_cap(lens, row_cap):
+    for row in _pack_plan(lens, row_cap):
+        assert sum(lens[i] for i in row) <= row_cap
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=30),
+       st.integers(64, 256))
+def test_pack_plan_within_row_order_preserved(lens, row_cap):
+    """Jobs land in a row in first-fit-decreasing visit order: lengths
+    non-increasing along the row, ties broken by ascending job index —
+    the order _prime_jobs relies on when assigning segment ids/offsets."""
+    for row in _pack_plan(lens, row_cap):
+        for a, b in zip(row, row[1:]):
+            assert lens[a] > lens[b] or (lens[a] == lens[b] and a < b)
+
+
+@given(st.lists(st.integers(1, 64), min_size=2, max_size=30))
+def test_pack_plan_never_worse_than_one_row_per_job(lens):
+    assert len(_pack_plan(lens, 64)) <= len(lens)
+
+
+# --------------------------------------------------------------------------
+# engine shape bucketing: monotone power-of-two, clamped at max_seq_len
+# --------------------------------------------------------------------------
+
+
+@given(st.integers(1, 10**6), st.integers(1, 10**6))
+def test_bucket_monotone_power_of_two(a, b):
+    lo, hi = min(a, b), max(a, b)
+    blo, bhi = _bucket(lo), _bucket(hi)
+    assert blo <= bhi                       # monotone
+    assert blo >= max(lo, 64)               # covers the request
+    assert blo & (blo - 1) == 0             # power of two (minimum=64 is)
+    if blo > 64:
+        assert blo // 2 < lo                # tight: next bucket down fails
+
+
+@given(st.integers(1, 10**5), st.integers(1, 10**5))
+def test_bucket_clamped_never_exceeds_max_seq_len(n, max_seq_len):
+    got = _bucket_clamped(n, max_seq_len)
+    assert got <= max_seq_len               # the clamp (cap 3000 -> 3000,
+    assert got == min(_bucket(n), max_seq_len)  # not bucket 4096)
+
+
+@given(st.integers(1, 10**5), st.integers(1, 10**5), st.integers(1, 10**5))
+def test_bucket_clamped_monotone_in_both_args(a, b, max_seq_len):
+    lo, hi = min(a, b), max(a, b)
+    assert _bucket_clamped(lo, max_seq_len) <= _bucket_clamped(hi,
+                                                               max_seq_len)
+
+
+# --------------------------------------------------------------------------
 # blocked attention == dense attention (the long-context jnp path)
 # --------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2**31 - 1), st.sampled_from([512, 1024]),
        st.sampled_from([1, 2]), st.booleans(),
        st.sampled_from([0, 256, 600]))
