@@ -12,7 +12,8 @@ PYTEST ?= python -m pytest
 .PHONY: smoke full bench
 
 # sub-minute loop: everything not marked slow (includes the 2-cell
-# equivalence smoke subset)
+# equivalence smoke subset and the fast protocol cross-task-batching
+# scenario)
 smoke:
 	$(PYTEST) -q -m "not slow"
 
@@ -25,3 +26,8 @@ full:
 # experiments/bench_results.csv
 bench:
 	python -m benchmarks.run --only engine
+
+# protocol-tier scenario: concurrent vs serial multi-task MinionS over one
+# shared engine pool (merges the "protocol" key into BENCH_engine.json)
+bench-protocol:
+	python -m benchmarks.run --only protocol

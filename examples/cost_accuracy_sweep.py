@@ -2,23 +2,30 @@
 synthetic suite: local-only / Minion / MinionS / RAG / remote-only across
 local model scales, printed as an ASCII scatter + CSV.
 
+Every sweep point runs ALL its tasks concurrently through one
+ProtocolRunner: the N documents' protocol loops interleave, so each step
+drains one shared local batch instead of N serial ones — the runner API
+this example now demonstrates end-to-end.
+
     PYTHONPATH=src python examples/cost_accuracy_sweep.py [--tasks 24]
 """
 import argparse
 
-from repro.core import (CostModel, MinionConfig, MinionSConfig, Usage,
-                        run_local_only, run_minion, run_minions, run_rag,
-                        run_remote_only)
+from repro.core import (CostModel, MinionConfig, MinionSConfig,
+                        ProtocolRunner, RagConfig, TaskSpec, Usage)
 from repro.core.simulated import ScriptedRemote, SimulatedLocal
 from repro.core.tasks import make_dataset, score_answer
 
 CM = CostModel()
 
 
-def evaluate(runner, tasks):
+def evaluate(protocol, cfg, tasks, *, local=None, remote=None):
+    """Run ``protocol`` over all tasks CONCURRENTLY on one shared pool."""
+    runner = ProtocolRunner(local, remote)
+    results = runner.run([TaskSpec(protocol, t.context, t.query, cfg)
+                          for t in tasks])
     correct, usage = 0, Usage()
-    for t in tasks:
-        r = runner(t)
+    for t, r in zip(tasks, results):
         correct += score_answer(r.answer, t.answer)
         usage += r.remote_usage
     return correct / len(tasks), CM.usd(usage) / len(tasks)
@@ -32,24 +39,19 @@ def main():
     remote = ScriptedRemote(seed=0)
 
     points = []
-    acc, cost = evaluate(
-        lambda t: run_remote_only(remote, t.context, t.query), tasks)
+    acc, cost = evaluate("remote_only", None, tasks, remote=remote)
     points.append(("remote-only", acc, cost))
-    acc, cost = evaluate(
-        lambda t: run_rag(remote, t.context, t.query, top_k=10), tasks)
+    acc, cost = evaluate("rag", RagConfig(top_k=10), tasks, remote=remote)
     points.append(("rag-bm25-10", acc, cost))
     for prof in ("llama-8b", "llama-3b", "llama-1b"):
         local = SimulatedLocal(prof, seed=0)
-        acc, cost = evaluate(
-            lambda t: run_local_only(local, t.context, t.query), tasks)
+        acc, cost = evaluate("local_only", None, tasks, local=local)
         points.append((f"local-{prof}", acc, cost))
-        acc, cost = evaluate(
-            lambda t: run_minion(local, remote, t.context, t.query,
-                                 MinionConfig(max_rounds=3)), tasks)
+        acc, cost = evaluate("minion", MinionConfig(max_rounds=3), tasks,
+                             local=local, remote=remote)
         points.append((f"minion-{prof}", acc, cost))
-        acc, cost = evaluate(
-            lambda t: run_minions(local, remote, t.context, t.query,
-                                  MinionSConfig()), tasks)
+        acc, cost = evaluate("minions", MinionSConfig(), tasks,
+                             local=local, remote=remote)
         points.append((f"minions-{prof}", acc, cost))
 
     print("\nname,accuracy,usd_per_query")

@@ -1,11 +1,16 @@
 """Serving-style driver: a persistent local engine answering a stream of
-batched MinionS requests (the deployment shape of the paper's system).
+MinionS requests CONCURRENTLY (the deployment shape of the paper's system).
 
-    PYTHONPATH=src python examples/serve_minions.py [--requests 3]
+    PYTHONPATH=src python examples/serve_minions.py [--requests 3] [--serial]
 
-Each incoming (document, query) request runs the full MinionS loop against
-the shared local engine; the report shows per-request cost, tokens and
-engine utilisation — the operational counters a real deployment monitors.
+All incoming (document, query) requests run as action-stream protocol
+tasks under one ProtocolRunner: each step, every task's worker jobs merge
+into ONE drain of the shared continuously-batched engine pool, so the
+decode slots fill with jobs from every live request instead of one
+request's private batch.  ``--serial`` runs the old one-request-at-a-time
+loop against the same engine for comparison; the report shows per-request
+cost/accuracy plus the engine-pool counters (drains, serve calls) a real
+deployment monitors.
 """
 import argparse
 import time
@@ -13,7 +18,7 @@ import time
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core import CostModel, MinionSConfig, run_minions
+from repro.core import CostModel, MinionSConfig, ProtocolRunner, TaskSpec
 from repro.core.clients import EngineClient
 from repro.core.simulated import ScriptedRemote
 from repro.core.tasks import make_task, score_answer
@@ -25,6 +30,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--serial", action="store_true",
+                    help="one task at a time (same shared engine pool)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(vocab_size=512)
@@ -32,25 +39,38 @@ def main():
     engine = InferenceEngine(cfg, params, max_seq_len=4096,
                              truncate_long=True)
     local = EngineClient(engine, "local-engine", max_batch=8)
-    remote = ScriptedRemote(seed=0)
+    runner = ProtocolRunner(local, ScriptedRemote(seed=0))
     cm = CostModel()
 
+    tasks = [make_task(500 + i, n_pages=3, kind="extract")
+             for i in range(args.requests)]
+    pcfg = MinionSConfig(max_rounds=1, num_tasks_per_round=1,
+                         pages_per_chunk=1, worker_max_tokens=48)
+    # explicit task_ids pin each request's PRNG identity, so --serial and
+    # concurrent runs sample the same worker tokens and stay comparable
+    specs = [TaskSpec("minions", t.context, t.query, pcfg, task_id=i)
+             for i, t in enumerate(tasks)]
+
+    t0 = time.time()
+    if args.serial:
+        results = [runner.run([s])[0] for s in specs]
+    else:
+        results = runner.run(specs)
+    dt = time.time() - t0
+
     total_cost = 0.0
-    for i in range(args.requests):
-        task = make_task(500 + i, n_pages=3, kind="extract")
-        t0 = time.time()
-        r = run_minions(local, remote, task.context, task.query,
-                        MinionSConfig(max_rounds=1, num_tasks_per_round=1,
-                                      pages_per_chunk=1,
-                                      worker_max_tokens=48))
-        dt = time.time() - t0
+    for i, (task, r) in enumerate(zip(tasks, results)):
         usd = cm.usd(r.remote_usage)
         total_cost += usd
-        print(f"req {i}: {dt * 1e3:7.0f}ms  jobs={r.rounds[0].num_jobs:3d} "
+        print(f"req {i}: jobs={r.rounds[0].num_jobs:3d} "
               f"kept={r.rounds[0].num_kept:2d}  remote=${usd:.5f}  "
               f"answer={'OK' if score_answer(r.answer, task.answer) else r.answer!r}")
 
-    print(f"\nengine: {engine.usage.calls} batches, "
+    mode = "serial" if args.serial else "concurrent"
+    print(f"\n{mode}: {dt * 1e3:.0f}ms wall for {args.requests} requests")
+    print(f"pool: {runner.scheduler.drains} drains / "
+          f"{runner.scheduler.jobs_drained} worker jobs; engine "
+          f"{engine.usage.calls} batches, "
           f"{engine.usage.prefill_tokens:,} prefill tok, "
           f"{engine.usage.decode_tokens:,} decode tok (all FREE per §3)")
     print(f"total remote cost: ${total_cost:.5f}")

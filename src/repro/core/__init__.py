@@ -1,13 +1,29 @@
-"""The paper's contribution: local-remote collaboration protocols."""
-from .baselines import run_local_only, run_remote_only
+"""The paper's contribution: local-remote collaboration protocols.
+
+Protocols are resumable action streams (:mod:`repro.core.runtime`): a
+:class:`ProtocolRunner` drives many tasks concurrently over one shared
+serve pool, and the ``run_*`` functions are single-task compatibility
+wrappers."""
+from .baselines import (BaselineConfig, local_only_protocol,
+                        remote_only_protocol, run_local_only,
+                        run_remote_only)
 from .cost import GPT4O_JAN2025, CostModel, PriceTable
-from .minion import MinionConfig, run_minion
-from .minions import MinionSConfig, run_minions
-from .rag import run_rag
+from .minion import MinionConfig, minion_protocol, run_minion
+from .minions import MinionSConfig, minions_protocol, run_minions
+from .rag import RagConfig, rag_protocol, run_rag
+from .runtime import (PROTOCOLS, Final, LocalBatch, ProtocolRunner,
+                      RemoteCall, TaskContext, TaskSpec, register_protocol,
+                      run_protocol)
 from .types import JobManifest, JobOutput, ProtocolResult, Usage
 
 __all__ = [
     "run_minion", "run_minions", "run_remote_only", "run_local_only",
-    "run_rag", "MinionConfig", "MinionSConfig", "CostModel", "PriceTable",
-    "GPT4O_JAN2025", "JobManifest", "JobOutput", "ProtocolResult", "Usage",
+    "run_rag", "MinionConfig", "MinionSConfig", "BaselineConfig",
+    "RagConfig", "CostModel", "PriceTable", "GPT4O_JAN2025", "JobManifest",
+    "JobOutput", "ProtocolResult", "Usage",
+    # action-stream runtime
+    "ProtocolRunner", "TaskSpec", "TaskContext", "RemoteCall", "LocalBatch",
+    "Final", "PROTOCOLS", "register_protocol", "run_protocol",
+    "minion_protocol", "minions_protocol", "remote_only_protocol",
+    "local_only_protocol", "rag_protocol",
 ]

@@ -1,26 +1,44 @@
-"""Remote-only and local-only baselines (paper Table 1 rows 1–5)."""
+"""Remote-only and local-only baselines (paper Table 1 rows 1–5), as
+action-stream protocols (see :mod:`repro.core.runtime`) plus their
+single-task compatibility wrappers."""
 from __future__ import annotations
 
-from .clients import UsageMeter
+import dataclasses
+
 from .prompts import render_direct
-from .types import ProtocolResult, Usage
-from repro.serving.tokenizer import approx_tokens
+from .runtime import (Final, LocalBatch, RemoteCall, register_protocol,
+                      run_protocol)
+from .types import ProtocolResult
+
+
+@dataclasses.dataclass
+class BaselineConfig:
+    max_tokens: int = 256
+
+
+@register_protocol("remote_only")
+def remote_only_protocol(task):
+    cfg = task.cfg or BaselineConfig()
+    prompt = render_direct(task.context, task.query)
+    out = yield RemoteCall(prompt, max_tokens=cfg.max_tokens)
+    yield Final(out, transcript=[{"role": "remote", "text": out}])
+
+
+@register_protocol("local_only")
+def local_only_protocol(task):
+    cfg = task.cfg or BaselineConfig()
+    prompt = render_direct(task.context, task.query)
+    out = (yield LocalBatch([prompt], max_tokens=cfg.max_tokens))[0]
+    yield Final(out, transcript=[{"role": "local", "text": out}])
 
 
 def run_remote_only(remote, context: str, query: str,
                     max_tokens: int = 256) -> ProtocolResult:
-    remote = UsageMeter(remote)
-    prompt = render_direct(context, query)
-    out = remote.complete(prompt, max_tokens=max_tokens)
-    return ProtocolResult(answer=out, remote_usage=remote.usage,
-                          transcript=[{"role": "remote", "text": out}])
+    return run_protocol(remote_only_protocol, remote=remote, context=context,
+                        query=query, cfg=BaselineConfig(max_tokens))
 
 
 def run_local_only(local, context: str, query: str,
                    max_tokens: int = 256) -> ProtocolResult:
-    prompt = render_direct(context, query)
-    out = local.complete(prompt, max_tokens=max_tokens)
-    return ProtocolResult(answer=out, remote_usage=Usage(),
-                          local_prefill_tokens=approx_tokens(prompt),
-                          local_decode_tokens=approx_tokens(out),
-                          transcript=[{"role": "local", "text": out}])
+    return run_protocol(local_only_protocol, local=local, context=context,
+                        query=query, cfg=BaselineConfig(max_tokens))

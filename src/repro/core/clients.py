@@ -32,34 +32,67 @@ class MeteredCall:
     completion_tokens: int
 
 
-class UsageMeter:
-    """Counts prefill/decode tokens of every call through a client."""
+def complete_batch_any(client, prompts: Sequence[str], **kw) -> List[str]:
+    """Batch-complete against any client: use its ``complete_batch`` when
+    it has one, else loop ``complete`` — the single implementation of the
+    fallback (meters, the runner, and scheduler adapters all route here)."""
+    if hasattr(client, "complete_batch"):
+        return client.complete_batch(prompts, **kw)
+    return [client.complete(p, **kw) for p in prompts]
 
-    def __init__(self, client):
+
+class UsageMeter:
+    """Counts prefill/decode tokens of every call through a client.
+
+    ``free=True`` marks the meter as the *uncosted* side of a protocol
+    (the on-device model, paper §3): tokens are tracked identically but
+    the flag tells cost accounting — and readers — that this meter's
+    usage is free.  All protocols meter both sides through UsageMeter;
+    no hand-rolled ``approx_tokens`` sums.
+
+    External execution (the :class:`~repro.core.runtime.ProtocolRunner`
+    batches calls across tasks itself) is metered via :meth:`record`,
+    the single accounting primitive ``complete``/``complete_batch``
+    also go through.
+
+    Nesting: a UsageMeter may wrap another UsageMeter (e.g. a caller's
+    global meter under a protocol's per-task meter).  Each meter in the
+    chain counts every boundary crossing exactly ONCE — the batch
+    fallback for clients without ``complete_batch`` calls
+    ``self.client.complete`` (the wrapped client), never the outer
+    metered ``self.complete``, so no meter double-counts its own calls.
+    ``nested`` flags the arrangement for callers that want to assert a
+    raw client (summing a nested chain's usages double-counts by
+    construction — they meter the SAME calls at different scopes)."""
+
+    def __init__(self, client=None, *, free: bool = False):
         self.client = client
+        self.free = free
+        self.nested = isinstance(client, UsageMeter)
         self.usage = Usage()
         self.calls: List[MeteredCall] = []
 
     @property
     def name(self):
-        return self.client.name
+        return self.client.name if self.client is not None else "unmetered"
+
+    def record(self, prompt: str, completion: str) -> None:
+        """Meter one (prompt, completion) exchange executed elsewhere."""
+        c = MeteredCall(approx_tokens(prompt), approx_tokens(completion))
+        self.calls.append(c)
+        self.usage.add(c.prompt_tokens, c.completion_tokens)
 
     def complete(self, prompt: str, **kw) -> str:
         out = self.client.complete(prompt, **kw)
-        c = MeteredCall(approx_tokens(prompt), approx_tokens(out))
-        self.calls.append(c)
-        self.usage.add(c.prompt_tokens, c.completion_tokens)
+        self.record(prompt, out)
         return out
 
     def complete_batch(self, prompts: Sequence[str], **kw) -> List[str]:
-        if hasattr(self.client, "complete_batch"):
-            outs = self.client.complete_batch(prompts, **kw)
-        else:
-            outs = [self.client.complete(p, **kw) for p in prompts]
+        # the fallback goes through the WRAPPED client: routing it through
+        # self.complete would meter each prompt twice here
+        outs = complete_batch_any(self.client, prompts, **kw)
         for p, o in zip(prompts, outs):
-            c = MeteredCall(approx_tokens(p), approx_tokens(o))
-            self.calls.append(c)
-            self.usage.add(c.prompt_tokens, c.completion_tokens)
+            self.record(p, o)
         return outs
 
 

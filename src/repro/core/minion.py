@@ -1,17 +1,21 @@
 """The MINION protocol (paper §4): naïve free-form local↔remote chat.
 
 Only the local model reads the full context; the remote model steers the
-conversation and decides when it can answer."""
+conversation and decides when it can answer.  The protocol is an action
+stream (see :mod:`repro.core.runtime`): it yields ``RemoteCall`` /
+``LocalBatch`` actions and is resumed with their results, so a runner can
+interleave many Minion conversations over one shared serve pool.
+``run_minion`` is the single-task compatibility wrapper."""
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional
 
-from .clients import UsageMeter
 from .prompts import (render_minion_local, render_minion_remote_continue,
                       render_minion_remote_init)
+from .runtime import (Final, LocalBatch, RemoteCall, register_protocol,
+                      run_protocol)
 from .types import ProtocolResult, RoundRecord, Usage, extract_json
-from repro.serving.tokenizer import approx_tokens
 
 
 @dataclasses.dataclass
@@ -21,49 +25,47 @@ class MinionConfig:
     remote_max_tokens: int = 256
 
 
-def run_minion(local, remote, context: str, query: str,
-               cfg: Optional[MinionConfig] = None) -> ProtocolResult:
-    cfg = cfg or MinionConfig()
-    remote = UsageMeter(remote)
-    local_prefill = 0
-    local_decode = 0
+@register_protocol("minion")
+def minion_protocol(task):
+    """Yield the Minion chat as typed actions.  ``task`` is a
+    :class:`~repro.core.runtime.TaskContext`; per-round remote usage is
+    read off the runner-maintained meter."""
+    cfg = task.cfg or MinionConfig()
     rounds: List[RoundRecord] = []
     transcript = []
     history_lines: List[str] = []
     answer: Optional[str] = None
 
     # -- iteration 1: remote initialises -----------------------------------
-    init_prompt = render_minion_remote_init(query)
-    message = remote.complete(init_prompt, max_tokens=cfg.remote_max_tokens)
+    init_prompt = render_minion_remote_init(task.query)
+    message = yield RemoteCall(init_prompt, max_tokens=cfg.remote_max_tokens)
     transcript.append({"role": "remote", "round": 0, "text": message})
 
     for rnd in range(cfg.max_rounds):
-        usage_before = (remote.usage.prefill_tokens,
-                        remote.usage.decode_tokens)
+        usage_before = (task.remote_usage.prefill_tokens,
+                        task.remote_usage.decode_tokens)
         rec = RoundRecord(round_index=rnd)
 
         # -- local reads the document and replies --------------------------
-        local_prompt = render_minion_local(context, query, message)
-        response = local.complete(local_prompt,
-                                  max_tokens=cfg.local_max_tokens)
-        local_prefill += approx_tokens(local_prompt)
-        local_decode += approx_tokens(response)
+        local_prompt = render_minion_local(task.context, task.query, message)
+        response = (yield LocalBatch([local_prompt],
+                                     max_tokens=cfg.local_max_tokens))[0]
         transcript.append({"role": "local", "round": rnd, "text": response})
         history_lines.append(f"remote: {message}")
         history_lines.append(f"local: {response}")
 
         # -- remote decides -------------------------------------------------
         cont_prompt = render_minion_remote_continue(
-            query, response, "\n".join(history_lines[:-2]))
-        decision_text = remote.complete(cont_prompt,
-                                        max_tokens=cfg.remote_max_tokens)
+            task.query, response, "\n".join(history_lines[:-2]))
+        decision_text = yield RemoteCall(cont_prompt,
+                                         max_tokens=cfg.remote_max_tokens)
         transcript.append({"role": "remote", "round": rnd,
                            "text": decision_text})
         data = extract_json(decision_text) or {}
         rec.decision = str(data.get("decision", ""))
         rec.remote_usage = Usage(
-            remote.usage.prefill_tokens - usage_before[0],
-            remote.usage.decode_tokens - usage_before[1])
+            task.remote_usage.prefill_tokens - usage_before[0],
+            task.remote_usage.decode_tokens - usage_before[1])
         rounds.append(rec)
 
         if rec.decision == "provide_final_answer" \
@@ -73,7 +75,11 @@ def run_minion(local, remote, context: str, query: str,
             break
         message = str(data.get("message", "Please continue."))
 
-    return ProtocolResult(answer=answer, remote_usage=remote.usage,
-                          local_prefill_tokens=local_prefill,
-                          local_decode_tokens=local_decode,
-                          rounds=rounds, transcript=transcript)
+    yield Final(answer, rounds=rounds, transcript=transcript)
+
+
+def run_minion(local, remote, context: str, query: str,
+               cfg: Optional[MinionConfig] = None) -> ProtocolResult:
+    """Single-task compatibility wrapper over the action-stream protocol."""
+    return run_protocol(minion_protocol, local=local, remote=remote,
+                        context=context, query=query, cfg=cfg)

@@ -1,17 +1,28 @@
-"""The MINIONS protocol (paper §5): decompose → execute → aggregate loop."""
+"""The MINIONS protocol (paper §5): decompose → execute → aggregate loop.
+
+Expressed as an action stream (see :mod:`repro.core.runtime`): each round
+yields one ``RemoteCall`` for the decompose code, one ``LocalBatch`` that
+fans the generated jobs out to the worker pool (``samples`` replicas per
+job for repeated sampling, §6.3), and one ``RemoteCall`` to synthesize.
+Because the protocol never touches a client directly, a
+:class:`~repro.core.runtime.ProtocolRunner` can interleave many MinionS
+tasks so their worker jobs share ONE continuously-batched engine drain per
+round — the paper's "execute locally in parallel" step applied *across*
+tasks, not just within one.  ``run_minions`` is the single-task
+compatibility wrapper."""
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional
 
-from .clients import UsageMeter
 from .filtering import filter_outputs
 from .prompts import (format_extractions, render_decompose, render_synthesize,
                       render_worker)
+from .runtime import (Final, LocalBatch, RemoteCall, register_protocol,
+                      run_protocol)
 from .sandbox import SandboxError, run_decompose_code
 from .types import (JobManifest, JobOutput, ProtocolResult, RoundRecord,
                     Usage, extract_code, extract_json)
-from repro.serving.tokenizer import approx_tokens
 
 
 @dataclasses.dataclass
@@ -26,17 +37,14 @@ class MinionSConfig:
     worker_max_tokens: int = 256
 
 
-def run_minions(local, remote, context: str, query: str,
-                cfg: Optional[MinionSConfig] = None) -> ProtocolResult:
-    """Run MinionS for one (context, query) task.
+@register_protocol("minions")
+def minions_protocol(task):
+    """Yield one MinionS task as typed actions.
 
-    ``local`` / ``remote`` are LMClients; remote usage is metered (costed),
-    local usage is tracked but free (§3).
-    """
-    cfg = cfg or MinionSConfig()
-    remote = UsageMeter(remote)
-    local_prefill = 0
-    local_decode = 0
+    ``task`` is a :class:`~repro.core.runtime.TaskContext`; remote usage
+    is read off the runner-maintained meter (remote is costed, local is
+    metered free, §3)."""
+    cfg = task.cfg or MinionSConfig()
     rounds: List[RoundRecord] = []
     transcript = []
     scratchpad = ""
@@ -46,36 +54,33 @@ def run_minions(local, remote, context: str, query: str,
     for rnd in range(cfg.max_rounds):
         rec = RoundRecord(round_index=rnd)
         force_final = rnd == cfg.max_rounds - 1
-        usage_before = (remote.usage.prefill_tokens,
-                        remote.usage.decode_tokens)
+        usage_before = (task.remote_usage.prefill_tokens,
+                        task.remote_usage.decode_tokens)
 
         # -- Step 1: job preparation on remote (code generation) ----------
-        dec_prompt = render_decompose(query, rnd + 1, scratchpad,
+        dec_prompt = render_decompose(task.query, rnd + 1, scratchpad,
                                       cfg.pages_per_chunk,
                                       cfg.num_tasks_per_round)
-        code_text = remote.complete(dec_prompt, max_tokens=1024)
+        code_text = yield RemoteCall(dec_prompt, max_tokens=1024)
         transcript.append({"role": "remote/decompose", "round": rnd,
                            "text": code_text})
         code = extract_code(code_text)
         try:
             if code is None:
                 raise SandboxError("no code block in decompose response")
-            jobs = run_decompose_code(code, context, last_jobs,
+            jobs = run_decompose_code(code, task.context, last_jobs,
                                       max_jobs=cfg.max_jobs)
         except SandboxError as e:
             transcript.append({"role": "system", "round": rnd,
                                "text": f"sandbox error: {e}"})
-            jobs = _fallback_jobs(context, query, cfg)
+            jobs = _fallback_jobs(task.context, task.query, cfg)
         rec.num_jobs = len(jobs)
 
         # -- Step 2: execute locally in parallel + filter ------------------
-        worker_prompts = [render_worker(j) for j in jobs
-                          for _ in range(cfg.num_samples)]
-        raw = local.complete_batch(worker_prompts,
-                                   temperature=cfg.worker_temperature,
-                                   max_tokens=cfg.worker_max_tokens)
-        local_prefill += sum(approx_tokens(p) for p in worker_prompts)
-        local_decode += sum(approx_tokens(o) for o in raw)
+        raw = yield LocalBatch([render_worker(j) for j in jobs],
+                               temperature=cfg.worker_temperature,
+                               max_tokens=cfg.worker_max_tokens,
+                               samples=cfg.num_samples)
         outputs: List[JobOutput] = []
         idx = 0
         for j in jobs:
@@ -87,16 +92,16 @@ def run_minions(local, remote, context: str, query: str,
         rec.num_kept = len(kept)
 
         # -- Step 3: aggregate on remote -----------------------------------
-        syn_prompt = render_synthesize(query, format_extractions(kept),
+        syn_prompt = render_synthesize(task.query, format_extractions(kept),
                                        scratchpad, force_final)
-        syn_text = remote.complete(syn_prompt, max_tokens=512)
+        syn_text = yield RemoteCall(syn_prompt, max_tokens=512)
         transcript.append({"role": "remote/synthesize", "round": rnd,
                            "text": syn_text})
         data = extract_json(syn_text) or {}
         rec.decision = str(data.get("decision", ""))
         rec.remote_usage = Usage(
-            remote.usage.prefill_tokens - usage_before[0],
-            remote.usage.decode_tokens - usage_before[1])
+            task.remote_usage.prefill_tokens - usage_before[0],
+            task.remote_usage.decode_tokens - usage_before[1])
         rounds.append(rec)
 
         if rec.decision == "provide_final_answer" or force_final:
@@ -120,10 +125,20 @@ def run_minions(local, remote, context: str, query: str,
             scratchpad = explanation
         last_jobs = jobs
 
-    return ProtocolResult(answer=answer, remote_usage=remote.usage,
-                          local_prefill_tokens=local_prefill,
-                          local_decode_tokens=local_decode,
-                          rounds=rounds, transcript=transcript)
+    yield Final(answer, rounds=rounds, transcript=transcript)
+
+
+def run_minions(local, remote, context: str, query: str,
+                cfg: Optional[MinionSConfig] = None) -> ProtocolResult:
+    """Run MinionS for one (context, query) task.
+
+    Single-task compatibility wrapper: builds a one-task
+    :class:`~repro.core.runtime.ProtocolRunner` (remote metered/costed,
+    local metered free) and returns the identical
+    :class:`~repro.core.types.ProtocolResult` the blocking loop used to.
+    To run many tasks over one shared pool, use the runner directly."""
+    return run_protocol(minions_protocol, local=local, remote=remote,
+                        context=context, query=query, cfg=cfg)
 
 
 def _fallback_jobs(context: str, query: str,

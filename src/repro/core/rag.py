@@ -1,5 +1,7 @@
 """Retrieval-augmented generation baseline (paper §6.5): BM25 retrieval over
-character chunks, retrieved chunks handed to the remote model."""
+character chunks, retrieved chunks handed to the remote model.  The
+retrieval step is pure local compute, so the action-stream protocol does
+it inline and yields a single ``RemoteCall`` over the retrieved text."""
 from __future__ import annotations
 
 import dataclasses
@@ -8,8 +10,9 @@ import re
 from collections import Counter
 from typing import List, Sequence
 
-from .baselines import run_remote_only
 from .chunking import chunk_by_chars
+from .prompts import render_direct
+from .runtime import Final, RemoteCall, register_protocol, run_protocol
 from .types import ProtocolResult
 
 _TOKEN_RE = re.compile(r"[a-z0-9]+")
@@ -58,11 +61,28 @@ class BM25:
         return [i for _, i in scores[:k]]
 
 
+@dataclasses.dataclass
+class RagConfig:
+    chunk_chars: int = 1000
+    top_k: int = 10
+    max_tokens: int = 256
+
+
+@register_protocol("rag")
+def rag_protocol(task):
+    cfg = task.cfg or RagConfig()
+    chunks = chunk_by_chars(task.context, cfg.chunk_chars)
+    bm25 = BM25(chunks)
+    idx = sorted(bm25.top_k(task.query, cfg.top_k))
+    retrieved = "\n...\n".join(chunks[i] for i in idx)
+    prompt = render_direct(retrieved, task.query)
+    out = yield RemoteCall(prompt, max_tokens=cfg.max_tokens)
+    yield Final(out, transcript=[{"role": "remote", "text": out}])
+
+
 def run_rag(remote, context: str, query: str, *, chunk_chars: int = 1000,
             top_k: int = 10, max_tokens: int = 256) -> ProtocolResult:
     """Retrieve top_k chunks by BM25 and ask the remote over them only."""
-    chunks = chunk_by_chars(context, chunk_chars)
-    bm25 = BM25(chunks)
-    idx = sorted(bm25.top_k(query, top_k))
-    retrieved = "\n...\n".join(chunks[i] for i in idx)
-    return run_remote_only(remote, retrieved, query, max_tokens=max_tokens)
+    return run_protocol(rag_protocol, remote=remote, context=context,
+                        query=query,
+                        cfg=RagConfig(chunk_chars, top_k, max_tokens))

@@ -1,0 +1,373 @@
+"""Resumable protocol runtime: protocols as action streams.
+
+Protocols (Minion, MinionS, the baselines) are no longer blocking
+functions that own their clients.  Each one is a *generator* that yields
+typed actions — :class:`RemoteCall`, :class:`LocalBatch`, :class:`Final` —
+and receives each action's result at the matching ``send``.  The
+:class:`ProtocolRunner` drives **many tasks concurrently** over one shared
+serve pool: every step it collects the pending ``LocalBatch`` actions from
+all live tasks into one persistent :class:`~repro.serving.JobScheduler`
+drain (cross-task continuous batching — the engine's slot pool fills with
+worker jobs from *every* task, not one task's private batch) and services
+independent ``RemoteCall`` actions as one batched remote request, then
+resumes each task with its results.
+
+Token accounting is uniform: the runner meters both sides of every task
+through :class:`~repro.core.clients.UsageMeter` (the local side in
+``free=True`` mode, §3 of the paper — tracked but not costed), so no
+protocol hand-rolls ``approx_tokens`` sums.
+
+Determinism: a local job's PRNG lane is derived from
+``(task_id, job_index, sample_index)`` — stable identities the runner
+assigns — never from where the job lands in a shared drain, so which
+tasks happen to coexist in the pool cannot perturb stochastic sampling.
+
+Single-task use stays one line via the compatibility wrappers
+(``run_minion`` / ``run_minions`` / ...), which build a one-task runner
+and return the identical :class:`ProtocolResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, Generator, List, Optional, Sequence,
+                    Tuple, Union)
+
+from .clients import UsageMeter, complete_batch_any
+from .types import ProtocolResult, RoundRecord, Usage
+
+# --------------------------------------------------------------------------
+# typed actions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RemoteCall:
+    """Ask the (costed) remote model for one completion.
+
+    The runner batches RemoteCalls from different tasks that share
+    sampling params into one ``complete_batch`` request per step.
+    ``send`` value: the completion text (str)."""
+    prompt: str
+    max_tokens: int = 256
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class LocalBatch:
+    """Fan a batch of prompts out to the (free) local worker pool.
+
+    ``samples`` replicates each prompt for repeated test-time sampling
+    (paper §6.3); results come back flat in ``(prompt, sample)`` order,
+    ``len(prompts) * samples`` long.  All tasks' pending LocalBatches are
+    merged into ONE scheduler drain per runner step.
+    ``send`` value: List[str]."""
+    prompts: List[str]
+    temperature: float = 0.0
+    max_tokens: int = 256
+    samples: int = 1
+
+
+@dataclasses.dataclass
+class Final:
+    """Terminal action: the task's answer plus its protocol-specific
+    round records and transcript.  The runner folds in the metered
+    usage to build the :class:`ProtocolResult`."""
+    answer: Optional[str]
+    rounds: List[RoundRecord] = dataclasses.field(default_factory=list)
+    transcript: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
+
+
+Action = Union[RemoteCall, LocalBatch, Final]
+
+
+# --------------------------------------------------------------------------
+# protocol registry
+# --------------------------------------------------------------------------
+
+#: name -> generator function ``protocol(task: TaskContext)`` yielding
+#: actions.  Protocol modules self-register at import time.
+PROTOCOLS: Dict[str, Callable[["TaskContext"], Generator]] = {}
+
+
+def register_protocol(name: str):
+    def deco(fn):
+        PROTOCOLS[name] = fn
+        return fn
+    return deco
+
+
+def get_protocol(name: str):
+    """Resolve a registered protocol, importing the built-in protocol
+    modules on first use (they self-register)."""
+    if name not in PROTOCOLS:
+        from . import baselines, minion, minions, rag  # noqa: F401
+    if name not in PROTOCOLS:
+        raise KeyError(f"unknown protocol {name!r}; "
+                       f"registered: {sorted(PROTOCOLS)}")
+    return PROTOCOLS[name]
+
+
+# --------------------------------------------------------------------------
+# task state
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """One (protocol, document, query) unit of work for the runner.
+
+    ``task_id`` seeds the task's PRNG identity (local jobs get
+    ``(task_id, job_index)`` lanes); it defaults to the task's position
+    in the ``run`` call.  Pass it explicitly when the same logical task
+    must sample identically across different run compositions (e.g. a
+    serial-vs-concurrent comparison over a stochastic engine)."""
+    protocol: Union[str, Callable[["TaskContext"], Generator]]
+    context: str
+    query: str
+    cfg: Any = None
+    task_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class TaskContext:
+    """What a protocol generator sees: its inputs plus live usage views.
+
+    ``remote_usage`` / ``local_usage`` are the runner's per-task meters,
+    updated *before* the generator is resumed after each action — so a
+    protocol can diff them across a round to build per-round records,
+    exactly like the old blocking loops did with their private meters."""
+    task_id: int
+    context: str
+    query: str
+    cfg: Any = None
+    remote_meter: UsageMeter = None
+    local_meter: UsageMeter = None
+
+    @property
+    def remote_usage(self) -> Usage:
+        return self.remote_meter.usage
+
+    @property
+    def local_usage(self) -> Usage:
+        return self.local_meter.usage
+
+
+class _LiveTask:
+    """Runner-internal: a protocol generator mid-flight."""
+
+    def __init__(self, index: int, spec: TaskSpec):
+        fn = (get_protocol(spec.protocol)
+              if isinstance(spec.protocol, str) else spec.protocol)
+        self.index = index
+        tid = spec.task_id if spec.task_id is not None else index
+        # record()-only meters: the runner executes all calls itself
+        # (batched across tasks) and meters each task's share here
+        self.ctx = TaskContext(task_id=tid, context=spec.context,
+                               query=spec.query, cfg=spec.cfg,
+                               remote_meter=UsageMeter(),
+                               local_meter=UsageMeter(free=True))
+        self.gen = fn(self.ctx)
+        self.pending: Optional[Action] = None
+        self.result: Optional[ProtocolResult] = None
+        self.next_job = 0     # per-task job counter -> stable PRNG identity
+
+    def advance(self, value=None, *, first: bool = False) -> None:
+        """Resume the generator until it yields its next awaitable action
+        (or finishes).  ``Final`` terminates the task immediately."""
+        try:
+            action = next(self.gen) if first else self.gen.send(value)
+        except StopIteration:
+            self._finish(Final(None))
+            return
+        if isinstance(action, Final):
+            self._finish(action)
+        elif isinstance(action, (RemoteCall, LocalBatch)):
+            self.pending = action
+        else:
+            raise TypeError(f"protocol yielded {type(action).__name__}; "
+                            "expected RemoteCall | LocalBatch | Final")
+
+    def _finish(self, fin: Final) -> None:
+        self.gen.close()
+        self.pending = None
+        self.result = ProtocolResult(
+            answer=fin.answer,
+            remote_usage=self.ctx.remote_meter.usage,
+            local_prefill_tokens=self.ctx.local_meter.usage.prefill_tokens,
+            local_decode_tokens=self.ctx.local_meter.usage.decode_tokens,
+            rounds=fin.rounds, transcript=fin.transcript)
+
+
+# --------------------------------------------------------------------------
+# the runner
+# --------------------------------------------------------------------------
+
+
+class ProtocolRunner:
+    """Drive many protocol tasks concurrently over one shared serve pool.
+
+    ``local`` may be an :class:`~repro.core.clients.EngineClient` (its
+    streaming scheduler is reused), an
+    :class:`~repro.serving.InferenceEngine`, a plain ``LMClient``, or
+    ``None`` (protocols that never yield a ``LocalBatch``).  ``remote``
+    is any ``LMClient`` (or ``None`` for local-only work).  A
+    pre-existing :class:`~repro.serving.JobScheduler` can be passed
+    explicitly to share one pool across several runners (e.g. a serial
+    baseline measured against the same engine).
+
+    Each runner *step* services every live task's pending action:
+    all ``LocalBatch`` prompts are submitted to the shared scheduler with
+    ``(task_id, job_index)`` PRNG identities and run in ONE drain;
+    ``RemoteCall`` prompts are grouped by sampling params and served by
+    one ``complete_batch`` per group.  Tasks advance independently — a
+    task blocked on the remote never stalls its siblings' worker jobs.
+    """
+
+    def __init__(self, local=None, remote=None, *, max_batch: int = 8,
+                 seed: Optional[int] = None, scheduler=None):
+        self.local = local
+        self.remote = remote
+        # default the drain seed from the local client (EngineClient
+        # carries one), so wrapping a seeded client keeps its sampling
+        self.seed = seed if seed is not None \
+            else getattr(local, "seed", 0)
+        self.scheduler = scheduler or self._build_scheduler(local, max_batch)
+
+    @staticmethod
+    def _build_scheduler(local, max_batch: int):
+        if local is None:
+            return None
+        from repro.serving import InferenceEngine, JobScheduler
+        sched = getattr(local, "scheduler", None)    # EngineClient
+        if sched is not None:
+            return sched
+        if isinstance(local, InferenceEngine) or \
+                isinstance(getattr(local, "__self__", None),
+                           InferenceEngine):
+            return JobScheduler(local, max_batch=max_batch)
+
+        def _complete(prompts, temperature=0.0, key=None,
+                      max_new_tokens=128):
+            # client objects batch via complete_batch/complete; a bare
+            # callable (e.g. a bound complete_batch) takes the client
+            # batch signature directly
+            if hasattr(local, "complete") or hasattr(local, "complete_batch"):
+                return complete_batch_any(local, prompts,
+                                          temperature=temperature,
+                                          max_tokens=max_new_tokens)
+            return local(prompts, temperature=temperature,
+                         max_tokens=max_new_tokens)
+
+        return JobScheduler(_complete, max_batch=max_batch)
+
+    # ------------------------------------------------------------------
+    def run(self, specs: Sequence[TaskSpec]) -> List[ProtocolResult]:
+        """Run every task to completion; results in ``specs`` order."""
+        tids = [s.task_id if s.task_id is not None else i
+                for i, s in enumerate(specs)]
+        if len(set(tids)) != len(tids):
+            # duplicate identities would correlate two tasks' "independent"
+            # stochastic sampling (or trip the drain's lane-collision check
+            # far from the cause) — reject with the cause named
+            dup = sorted(t for t in set(tids) if tids.count(t) > 1)
+            raise ValueError(f"duplicate task_id(s) {dup} across specs "
+                             "(explicit task_ids must not collide with "
+                             "each other or with positional defaults)")
+        tasks = [_LiveTask(i, s) for i, s in enumerate(specs)]
+        for t in tasks:
+            t.advance(first=True)
+        while True:
+            local_waiters = [t for t in tasks
+                             if isinstance(t.pending, LocalBatch)]
+            remote_waiters = [t for t in tasks
+                              if isinstance(t.pending, RemoteCall)]
+            if not local_waiters and not remote_waiters:
+                break
+            replies: List[Tuple[_LiveTask, Any]] = []
+            if remote_waiters:
+                replies += self._service_remote(remote_waiters)
+            if local_waiters:
+                replies += self._service_local(local_waiters)
+            # meters were updated during servicing; only now resume the
+            # generators (so a task resumed early can't see a step's
+            # drain half-dispatched)
+            for t, value in replies:
+                t.pending = None
+                t.advance(value)
+        return [t.result for t in tasks]
+
+    def run_one(self, protocol, context: str, query: str,
+                cfg=None) -> ProtocolResult:
+        """Single-task convenience (the compatibility wrappers' engine)."""
+        return self.run([TaskSpec(protocol, context, query, cfg)])[0]
+
+    # ------------------------------------------------------------------
+    def _service_remote(self, waiters: List[_LiveTask]):
+        """One batched remote request per (temperature, max_tokens) class
+        across all waiting tasks; meter each completion into its task."""
+        if self.remote is None:
+            raise RuntimeError("protocol yielded RemoteCall but the runner "
+                               "has no remote client")
+        groups: Dict[Tuple[float, int], List[int]] = {}
+        for i, t in enumerate(waiters):
+            a = t.pending
+            groups.setdefault((a.temperature, a.max_tokens), []).append(i)
+        outs: List[Optional[str]] = [None] * len(waiters)
+        for (temp, mt), idxs in groups.items():
+            texts = complete_batch_any(
+                self.remote, [waiters[i].pending.prompt for i in idxs],
+                temperature=temp, max_tokens=mt)
+            for i, text in zip(idxs, texts):
+                outs[i] = text
+        for t, text in zip(waiters, outs):
+            t.ctx.remote_meter.record(t.pending.prompt, text)
+        return list(zip(waiters, outs))
+
+    def _service_local(self, waiters: List[_LiveTask]):
+        """Merge every task's LocalBatch into ONE shared scheduler drain.
+
+        Each prompt is submitted with a ``(task_id, job_index)`` PRNG
+        identity (the scheduler folds in the sample index), so a job's
+        stochastic stream is a function of its own identity — not of
+        which sibling tasks share the drain."""
+        if self.scheduler is None:
+            raise RuntimeError("protocol yielded LocalBatch but the runner "
+                               "has no local client/scheduler")
+        tickets: List[List[int]] = []
+        for t in waiters:
+            a = t.pending
+            ids = []
+            for prompt in a.prompts:
+                ids.append(self.scheduler.submit(
+                    prompt, samples=a.samples, temperature=a.temperature,
+                    max_new_tokens=a.max_tokens,
+                    rng_id=(t.ctx.task_id, t.next_job)))
+                t.next_job += 1
+            tickets.append(ids)
+        by_job: Dict[int, List[str]] = {}
+        for r in self.scheduler.drain(seed=self.seed):
+            by_job.setdefault(r.job_index, []).append(r.text)
+        replies = []
+        for t, ids in zip(waiters, tickets):
+            a = t.pending
+            texts: List[str] = []
+            for prompt, ji in zip(a.prompts, ids):
+                for text in by_job.get(ji, []):
+                    t.ctx.local_meter.record(prompt, text)
+                    texts.append(text)
+            replies.append((t, texts))
+        return replies
+
+
+# --------------------------------------------------------------------------
+# module-level convenience
+# --------------------------------------------------------------------------
+
+
+def run_protocol(protocol, *, local=None, remote=None, context: str,
+                 query: str, cfg=None, **runner_kw) -> ProtocolResult:
+    """Build a one-task runner and run ``protocol`` to completion —
+    the engine behind the ``run_*`` compatibility wrappers."""
+    return ProtocolRunner(local, remote, **runner_kw).run_one(
+        protocol, context, query, cfg)

@@ -11,8 +11,12 @@ under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to smoke-test
 an 8-device layout on CPU.  ``--serve`` routes the prompts through the
 continuously-batched slot pool instead of one convoy ``generate_batch``.
 
-This is the LocalLM side of the MinionS deployment; the protocol drivers in
-examples/ compose it with a remote client.
+``--minions N`` runs N synthetic MinionS requests CONCURRENTLY through a
+:class:`repro.core.ProtocolRunner` over this engine (simulated remote):
+every runner step drains one shared slot-pool batch holding worker jobs
+from all N requests — the full protocol tier on top of the LocalLM this
+launcher builds.  Without it, the launcher stays the bare LocalLM side
+and the protocol drivers in examples/ compose it with a remote client.
 """
 from __future__ import annotations
 
@@ -27,17 +31,20 @@ from repro.training import load
 
 
 def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
-                 max_seq_len: int = 4096, seed: int = 0,
-                 mesh=None) -> InferenceEngine:
+                 max_seq_len: int = 4096, seed: int = 0, mesh=None,
+                 truncate_long: bool = False) -> InferenceEngine:
     """``mesh``: None (single device), a ``jax.sharding.Mesh``, or
-    ``"auto"`` for the host mesh — passed straight through to the engine."""
+    ``"auto"`` for the host mesh — passed straight through to the engine.
+    ``truncate_long`` clips over-long prompts instead of raising (useful
+    when protocol-generated worker chunks can exceed the window)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     cfg = cfg.replace(vocab_size=max(512, min(cfg.vocab_size, 512)))
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
     if checkpoint:
         params, meta = load(checkpoint, params)
         print(f"loaded checkpoint ({meta})")
-    return InferenceEngine(cfg, params, max_seq_len=max_seq_len, mesh=mesh)
+    return InferenceEngine(cfg, params, max_seq_len=max_seq_len, mesh=mesh,
+                           truncate_long=truncate_long)
 
 
 def main():
@@ -57,6 +64,10 @@ def main():
                          "convoy generate_batch")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode rows in the serve pool (with --serve)")
+    ap.add_argument("--minions", type=int, default=0, metavar="N",
+                    help="run N concurrent MinionS requests through a "
+                         "ProtocolRunner over this engine (simulated "
+                         "remote) instead of raw prompts")
     ap.add_argument("--prompts", nargs="+",
                     default=["The total revenue for fiscal year 2015 was"])
     args = ap.parse_args()
@@ -67,7 +78,29 @@ def main():
         mesh = make_host_mesh(args.model_parallel)
         print(f"mesh: {dict(mesh.shape)}")
     engine = build_engine(args.arch, smoke=args.smoke,
-                          checkpoint=args.checkpoint, mesh=mesh)
+                          checkpoint=args.checkpoint, mesh=mesh,
+                          truncate_long=bool(args.minions))
+    if args.minions:
+        from repro.core import MinionSConfig, ProtocolRunner, TaskSpec
+        from repro.core.clients import EngineClient
+        from repro.core.simulated import ScriptedRemote
+        from repro.core.tasks import make_task
+        runner = ProtocolRunner(EngineClient(engine, max_batch=args.slots),
+                                ScriptedRemote(seed=0))
+        cfg = MinionSConfig(max_rounds=1, num_tasks_per_round=1,
+                            pages_per_chunk=1, worker_max_tokens=32)
+        tasks = [make_task(700 + i, n_pages=2, kind="extract")
+                 for i in range(args.minions)]
+        results = runner.run([TaskSpec("minions", t.context, t.query, cfg)
+                              for t in tasks])
+        for i, r in enumerate(results):
+            print(f"task {i}: answer={r.answer!r} "
+                  f"remote_tok={r.remote_usage.prefill_tokens}+"
+                  f"{r.remote_usage.decode_tokens}")
+        print(f"pool: {runner.scheduler.drains} drains / "
+              f"{runner.scheduler.jobs_drained} worker jobs")
+        print(f"usage: {engine.usage}")
+        return
     if args.serve:
         outs = engine.serve(args.prompts,
                             max_new_tokens=args.max_new_tokens,

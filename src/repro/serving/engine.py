@@ -583,7 +583,8 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def serve(self, prompts: Sequence[str], *,
               max_new_tokens=128, temperature=0.0, key=None,
-              stop: str = "\n###", slots: int = 4) -> List[str]:
+              per_job_keys=None, stop: str = "\n###",
+              slots: int = 4) -> List[str]:
         """Continuously-batched generation over a fixed pool of decode rows.
 
         Jobs stream through ``slots`` persistent rows: the jitted
@@ -594,6 +595,13 @@ class InferenceEngine:
         sibling to drain (no convoy effect).  ``max_new_tokens`` and
         ``temperature`` may be scalars or per-job sequences; results come
         back in submission order; all jobs share one ``stop`` string.
+
+        ``per_job_keys`` (optional, (n_jobs, 2) uint32) supplies each
+        job's PRNG lane explicitly — the :class:`~repro.serving.
+        JobScheduler` derives lanes from stable job identities so a
+        shared multi-task pool samples independently of drain
+        composition.  Without it, lanes default to
+        ``fold_in(key, position)`` as before.
 
         Admission is length-aware: a fresh cache epoch admits the longest
         queued jobs (they define the prompt bucket and can only start at an
@@ -620,6 +628,13 @@ class InferenceEngine:
                  else [float(temperature)] * n)
         if key is None:
             key = jax.random.PRNGKey(0)
+        if per_job_keys is not None:
+            per_job_keys = jnp.asarray(per_job_keys, jnp.uint32)
+            if per_job_keys.shape[0] != n:
+                # a short array would gather-clamp to the last lane and
+                # silently correlate the overflow jobs' samples
+                raise ValueError(f"per_job_keys has {per_job_keys.shape[0]} "
+                                 f"rows for {n} jobs")
         if not self.can_serve:
             # degrade to the scheduler's grouped convoy path — the single
             # implementation of param-class isolation (a greedy job never
@@ -633,7 +648,8 @@ class InferenceEngine:
             for j in range(n):
                 sched.submit(prompts[j], temperature=temps[j],
                              max_new_tokens=budgets[j])
-            return [r.text for r in sched.drain(key=key)]
+            return [r.text for r in sched.drain(key=key,
+                                                lanes=per_job_keys)]
 
         pad = ByteTokenizer.PAD
         slots = max(1, min(slots, n))
@@ -708,7 +724,9 @@ class InferenceEngine:
                 mrows[i, pos - ln:pos] = True
             cache["slot_mask"] = cache["slot_mask"].at[rows_arr].set(
                 jnp.asarray(mrows))
-            jkeys, sub = split_rows(job_keys(key, jids))
+            base = (per_job_keys[jnp.asarray(jids, jnp.int32)]
+                    if per_job_keys is not None else job_keys(key, jids))
+            jkeys, sub = split_rows(base)
             jtemp = jnp.asarray([temps[j] for j in jids], jnp.float32)
             tok = tok.at[rows_arr].set(sample_rows(first_logits, sub, jtemp))
             finished = finished.at[rows_arr].set(False)

@@ -466,6 +466,31 @@ def test_scheduler_drain_independent_of_submission_order(engine):
         assert run(order) == base
 
 
+def test_scheduler_stochastic_lanes_invariant_to_drain_composition(engine):
+    """Streaming path: a stochastic job's sampled TEXT is a function of
+    its stable rng_id — draining it alongside different companion jobs
+    (other param classes, other tasks) must not perturb it.  This is
+    what lets one shared pool serve many concurrent protocol tasks."""
+    stoch = [(f"stochastic job {i}", (7, i)) for i in range(3)]
+
+    def run(extra):
+        sched = JobScheduler(engine, max_batch=4)
+        ids = {}
+        for prompt, temp, rid in extra:
+            sched.submit(prompt, temperature=temp, max_new_tokens=8,
+                         rng_id=rid)
+        for prompt, rid in stoch:
+            ids[rid] = sched.submit(prompt, temperature=0.9,
+                                    max_new_tokens=8, rng_id=rid)
+        res = {r.job_index: r.text for r in sched.drain(seed=0)}
+        return {rid: res[ji] for rid, ji in ids.items()}
+
+    alone = run([])
+    assert run([("greedy filler", 0.0, (9, 0))]) == alone
+    assert run([("hot filler " + "x" * 20, 0.7, (5, 0)),
+                ("hot 2", 0.7, (5, 1))]) == alone
+
+
 def test_serve_rounds_slots_up_to_mesh_data_axis(engine):
     """A sharded engine's slot pool must place whole rows on every data
     shard: serve widens a 4-slot request to the 8-way data axis (visible
