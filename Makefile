@@ -9,7 +9,7 @@ export PYTHONPATH := src
 
 PYTEST ?= python -m pytest
 
-.PHONY: smoke full bench
+.PHONY: smoke full bench chaos
 
 # sub-minute loop: everything not marked slow (includes the 2-cell
 # equivalence smoke subset and the fast protocol cross-task-batching
@@ -20,6 +20,12 @@ smoke:
 # the whole suite, including the cross-backend equivalence grid
 full:
 	$(PYTEST) -q
+
+# deterministic chaos acceptance runs: seeded fault injection through the
+# full resilience stack (FaultyClient -> ResilientClient -> ProtocolRunner),
+# asserting bit-identical reruns and zero sibling aborts
+chaos:
+	$(PYTEST) -q -m chaos
 
 # engine benchmark scenarios (fused decode, packing, continuous batching,
 # sharded-vs-single-device serve); rewrites BENCH_engine.json and

@@ -496,9 +496,75 @@ def protocol_scenario(n_tasks: int = 6, *, n_pages: int = 2,
     return out
 
 
+def fault_scenario(n_tasks: int = 8,
+                   rates=(0.0, 0.15, 0.3, 0.5), seed: int = 0) -> Dict:
+    """Goodput vs injected remote fault rate: N concurrent MinionS tasks
+    per rate over one shared pool, the remote wrapped in a seeded
+    FaultyClient (errors + stalls) behind a ResilientClient (timeout,
+    retries, circuit breaker).  Goodput = fraction of tasks that still
+    produce an answer (ok or degraded); the statuses/attempt counters
+    show WHERE the supervision layer absorbed the faults."""
+    from repro.core import (MinionSConfig, ProtocolRunner, ResilientClient,
+                            TaskSpec)
+    from repro.core.faults import FaultyClient
+    from repro.core.tasks import make_dataset as _mk
+
+    tasks = _mk(n_tasks, seed=13, n_pages=8)
+    local = SimulatedLocal("llama-8b", seed=0)
+    cfg = MinionSConfig(max_rounds=2)
+    out: Dict = {"n_tasks": n_tasks, "seed": seed, "rates": []}
+    for rate in rates:
+        faulty = FaultyClient(ScriptedRemote(seed=0), seed=seed,
+                              error_rate=rate * 0.6,
+                              timeout_rate=rate * 0.4)
+        # deadline above the latency model's clean envelope (a 1024-token
+        # decompose draws ~2.1-2.5s) but far below a 60s stall, so only
+        # injected faults trip it
+        remote = ResilientClient(faulty, timeout_s=4.0, max_retries=2,
+                                 seed=seed, breaker_threshold=6,
+                                 breaker_cooldown=8)
+        runner = ProtocolRunner(local, remote)
+        t0 = time.time()
+        results = runner.run(
+            [TaskSpec("minions", t.context, t.query, cfg, task_id=i)
+             for i, t in enumerate(tasks)])
+        dt = time.time() - t0
+        statuses: Dict[str, int] = {}
+        for r in results:
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        answered = sum(r.answer is not None for r in results)
+        correct = sum(score_answer(r.answer, t.answer)
+                      for r, t in zip(results, tasks))
+        row = {
+            "fault_rate": rate,
+            "wall_s": round(dt, 3),
+            "goodput": round(answered / n_tasks, 3),
+            "accuracy": round(correct / n_tasks, 3),
+            "statuses": statuses,
+            "remote_attempts": remote.stats.attempts,
+            "retries": remote.stats.retries,
+            "timeouts": remote.stats.timeouts,
+            "breaker_opens": remote.stats.breaker_opens,
+            "fast_failures": remote.stats.fast_failures,
+            "degradations": runner.degradations,
+            "simulated_remote_s": round(faulty.simulated_s, 2),
+            # every attempt (failed retries included) stays on the bill
+            "attempt_prefill_tokens": remote.meter.usage.prefill_tokens,
+        }
+        out["rates"].append(row)
+        emit(f"protocol/faults_rate_{rate}", dt / n_tasks * 1e6,
+             f"goodput={row['goodput']};acc={row['accuracy']};"
+             f"statuses={'/'.join(f'{k}:{v}' for k, v in statuses.items())};"
+             f"retries={row['retries']};"
+             f"breaker_opens={row['breaker_opens']};"
+             f"degradations={row['degradations']}")
+    return out
+
+
 def protocol_bench(n_tasks: int):
-    """Emit the concurrent-vs-serial protocol scenario and merge it into
-    the BENCH_engine.json baseline (key "protocol")."""
+    """Emit the concurrent-vs-serial protocol scenario plus the
+    goodput-under-fault-rate sweep and merge both into the
+    BENCH_engine.json baseline (key "protocol")."""
     res = protocol_scenario(min(n_tasks, 8))
     for mode in ("serial", "concurrent"):
         m = res[mode]
@@ -510,6 +576,7 @@ def protocol_bench(n_tasks: int):
          f"drain_reduction={res['serial']['drains']}->"
          f"{res['concurrent']['drains']};"
          f"answers_identical={res['answers_identical']}")
+    res["goodput_vs_fault_rate"] = fault_scenario(min(n_tasks, 8))
     path = "BENCH_engine.json"
     data = {}
     if os.path.exists(path):

@@ -7,13 +7,16 @@ wrappers."""
 from .baselines import (BaselineConfig, local_only_protocol,
                         remote_only_protocol, run_local_only,
                         run_remote_only)
+from .clients import (BreakerOpen, CallTimeout, EngineClient, FaultStats,
+                      ResilientClient, UsageMeter)
 from .cost import GPT4O_JAN2025, CostModel, PriceTable
+from .faults import FaultyClient, InjectedFault, LatencyModel
 from .minion import MinionConfig, minion_protocol, run_minion
 from .minions import MinionSConfig, minions_protocol, run_minions
 from .rag import RagConfig, rag_protocol, run_rag
 from .runtime import (PROTOCOLS, Final, LocalBatch, ProtocolRunner,
-                      RemoteCall, TaskContext, TaskSpec, register_protocol,
-                      run_protocol)
+                      RemoteCall, RemoteFailure, TaskContext, TaskSpec,
+                      register_protocol, run_protocol)
 from .types import JobManifest, JobOutput, ProtocolResult, Usage
 
 __all__ = [
@@ -23,7 +26,11 @@ __all__ = [
     "JobOutput", "ProtocolResult", "Usage",
     # action-stream runtime
     "ProtocolRunner", "TaskSpec", "TaskContext", "RemoteCall", "LocalBatch",
-    "Final", "PROTOCOLS", "register_protocol", "run_protocol",
-    "minion_protocol", "minions_protocol", "remote_only_protocol",
-    "local_only_protocol", "rag_protocol",
+    "Final", "RemoteFailure", "PROTOCOLS", "register_protocol",
+    "run_protocol", "minion_protocol", "minions_protocol",
+    "remote_only_protocol", "local_only_protocol", "rag_protocol",
+    # fault tolerance / chaos harness
+    "ResilientClient", "FaultStats", "CallTimeout", "BreakerOpen",
+    "FaultyClient", "InjectedFault", "LatencyModel", "EngineClient",
+    "UsageMeter",
 ]

@@ -8,11 +8,22 @@ local/remote boundary, so cost accounting is identical for all clients.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Protocol, Sequence
+import random
+import time
+from typing import List, Optional, Protocol, Sequence, Union
 
 from repro.serving.tokenizer import approx_tokens
 
 from .types import Usage
+
+
+class CallTimeout(RuntimeError):
+    """A remote call exceeded its per-call deadline."""
+
+
+class BreakerOpen(RuntimeError):
+    """Fast-fail: the per-client circuit breaker is open — the call was
+    rejected without touching the wire (and without being metered)."""
 
 
 class LMClient(Protocol):
@@ -39,6 +50,30 @@ def complete_batch_any(client, prompts: Sequence[str], **kw) -> List[str]:
     if hasattr(client, "complete_batch"):
         return client.complete_batch(prompts, **kw)
     return [client.complete(p, **kw) for p in prompts]
+
+
+Outcome = Union[str, Exception]
+
+
+def complete_outcomes_any(client, prompts: Sequence[str],
+                          **kw) -> List[Outcome]:
+    """Batch-complete with PER-PROMPT outcomes: each slot is either the
+    completion text or the Exception that prompt's call raised.
+
+    Fault-aware clients (:class:`ResilientClient`,
+    :class:`~repro.core.faults.FaultyClient`) expose
+    ``complete_batch_outcomes`` for exact attribution.  A plain client is
+    called through :func:`complete_batch_any` unchanged — the fault-free
+    path is byte-identical to calling it directly — and, because one
+    raise loses the whole batch, an exception there is attributed to
+    every prompt in it (plain clients cannot say which one failed)."""
+    fn = getattr(client, "complete_batch_outcomes", None)
+    if fn is not None:
+        return fn(prompts, **kw)
+    try:
+        return list(complete_batch_any(client, prompts, **kw))
+    except Exception as e:                     # noqa: BLE001 — boundary
+        return [e for _ in prompts]
 
 
 class UsageMeter:
@@ -96,6 +131,176 @@ class UsageMeter:
         return outs
 
 
+@dataclasses.dataclass
+class FaultStats:
+    """Reliability counters a :class:`ResilientClient` exposes alongside
+    its :class:`UsageMeter` — one attempt may cost tokens (metered) AND
+    fail (counted here); the two views together are the full bill."""
+    attempts: int = 0            # wire calls, including failed retries
+    successes: int = 0
+    failures: int = 0            # failed attempts (timeouts included)
+    retries: int = 0             # re-attempts after a failed attempt
+    timeouts: int = 0
+    exhausted: int = 0           # calls that failed after every retry
+    fast_failures: int = 0       # rejected while the breaker was open
+    breaker_opens: int = 0       # closed/half-open -> open transitions
+    backoff_s: float = 0.0       # total (virtual) backoff delay accrued
+    state: str = "closed"        # closed | open | half_open
+    consecutive_failures: int = 0
+
+
+class ResilientClient:
+    """Fault-tolerant wrapper around any ``LMClient``: per-call timeouts,
+    bounded retries with exponential backoff + seeded jitter, and a
+    per-client circuit breaker (closed → open → half-open).
+
+    Accounting: EVERY attempt that reaches the wrapped client is metered
+    in ``self.meter`` — a failed or timed-out attempt still paid its
+    prompt tokens (completion tokens are only metered on success), which
+    is exactly the cost the paper's headline metric must not hide.
+    Breaker fast-fails never touch the wire and are not metered.
+
+    Timeouts are cooperative and deterministic: a latency-modeled client
+    (e.g. :class:`~repro.core.faults.FaultyClient`) reports its simulated
+    ``last_latency_s``, which is checked against ``timeout_s`` after the
+    call; wall-clock elapsed time is used for clients without a latency
+    model (post-hoc — a synchronous call cannot be aborted midway).
+
+    The breaker opens after ``breaker_threshold`` CONSECUTIVE failed
+    attempts; while open, calls fast-fail with :class:`BreakerOpen`.
+    Cooldown is counted in rejected calls (deterministic, no wall
+    clock): after ``breaker_cooldown`` fast-fails the next call runs as
+    a half-open probe — success closes the breaker, failure reopens it.
+
+    Backoff is *virtual* by default (accrued in ``stats.backoff_s``, no
+    real sleeping — simulated latency must not slow the test/benchmark
+    loop); pass ``sleep=time.sleep`` for a live deployment."""
+
+    def __init__(self, client, *, name: Optional[str] = None,
+                 timeout_s: Optional[float] = None, max_retries: int = 2,
+                 backoff_base_s: float = 0.05, backoff_jitter: float = 0.5,
+                 seed: int = 0, breaker_threshold: int = 4,
+                 breaker_cooldown: int = 8, sleep=None):
+        self.client = client
+        self.name = name or f"resilient:{getattr(client, 'name', 'client')}"
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_jitter = backoff_jitter
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
+        self.sleep = sleep
+        self.meter = UsageMeter()
+        self.stats = FaultStats()
+        self._rng = random.Random(seed)
+        self._cooldown_left = 0
+
+    # -- breaker state machine ------------------------------------------
+    def _admit(self) -> bool:
+        s = self.stats
+        if s.state == "open":
+            self._cooldown_left -= 1
+            if self._cooldown_left > 0:
+                return False
+            s.state = "half_open"          # next call is the probe
+        return True
+
+    def _on_success(self) -> None:
+        self.stats.consecutive_failures = 0
+        self.stats.state = "closed"
+
+    def _on_failure(self) -> None:
+        s = self.stats
+        s.consecutive_failures += 1
+        if s.state == "half_open" or (
+                s.state == "closed"
+                and s.consecutive_failures >= self.breaker_threshold):
+            s.state = "open"
+            s.breaker_opens += 1
+            self._cooldown_left = self.breaker_cooldown
+
+    # -- call path -------------------------------------------------------
+    def _call_once(self, prompt: str, temperature: float,
+                   max_tokens: int) -> str:
+        t0 = time.monotonic()
+        out = self.client.complete(prompt, temperature=temperature,
+                                   max_tokens=max_tokens) \
+            if hasattr(self.client, "complete") else \
+            complete_batch_any(self.client, [prompt],
+                               temperature=temperature,
+                               max_tokens=max_tokens)[0]
+        elapsed = getattr(self.client, "last_latency_s", None)
+        if elapsed is None:
+            elapsed = time.monotonic() - t0
+        if self.timeout_s is not None and elapsed > self.timeout_s:
+            self.stats.timeouts += 1
+            raise CallTimeout(f"remote call took {elapsed:.3f}s "
+                              f"(> timeout {self.timeout_s:.3f}s)")
+        return out
+
+    def _call(self, prompt: str, temperature: float,
+              max_tokens: int) -> Outcome:
+        if not self._admit():
+            self.stats.fast_failures += 1
+            return BreakerOpen(
+                f"circuit open after {self.stats.consecutive_failures} "
+                "consecutive failures")
+        last: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                if self.stats.state == "open":
+                    break                  # breaker tripped mid-retry-loop
+                self.stats.retries += 1
+                delay = self.backoff_base_s * (2 ** (attempt - 1))
+                delay *= 1.0 + self.backoff_jitter * self._rng.random()
+                self.stats.backoff_s += delay
+                if self.sleep is not None:
+                    self.sleep(delay)
+            self.stats.attempts += 1
+            try:
+                out = self._call_once(prompt, temperature, max_tokens)
+            except Exception as e:         # noqa: BLE001 — boundary
+                # the failed attempt still sent (and paid for) its prompt
+                self.meter.record(prompt, "")
+                self.stats.failures += 1
+                last = e
+                self._on_failure()
+                continue
+            self.meter.record(prompt, out)
+            self.stats.successes += 1
+            self._on_success()
+            return out
+        self.stats.exhausted += 1
+        return last
+
+    # -- client interface -------------------------------------------------
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 256) -> str:
+        out = self._call(prompt, temperature, max_tokens)
+        if isinstance(out, Exception):
+            raise out
+        return out
+
+    def complete_batch(self, prompts: Sequence[str], *,
+                       temperature: float = 0.0,
+                       max_tokens: int = 256) -> List[str]:
+        outs = self.complete_batch_outcomes(prompts, temperature=temperature,
+                                            max_tokens=max_tokens)
+        for o in outs:
+            if isinstance(o, Exception):
+                raise o
+        return outs
+
+    def complete_batch_outcomes(self, prompts: Sequence[str], *,
+                                temperature: float = 0.0,
+                                max_tokens: int = 256) -> List[Outcome]:
+        """Per-prompt outcomes — each prompt gets its own retry budget
+        and breaker admission, so one bad prompt cannot poison its
+        batch-mates (the runner's per-task fault isolation relies on
+        this attribution)."""
+        return [self._call(p, temperature, max_tokens) for p in prompts]
+
+
 class EngineClient:
     """A real JAX model served by repro.serving.InferenceEngine.
 
@@ -122,6 +327,8 @@ class EngineClient:
     def complete_batch(self, prompts: Sequence[str], *,
                        temperature: float = 0.0,
                        max_tokens: int = 256) -> List[str]:
+        if not prompts:        # an empty round must not reach the engine
+            return []
         res = self.scheduler.run(list(prompts), temperature=temperature,
                                  seed=self.seed, max_new_tokens=max_tokens)
         return [r.text for r in res]

@@ -1,0 +1,149 @@
+"""Deterministic chaos harness: seeded fault injection over any LMClient.
+
+:class:`FaultyClient` wraps a real client and injects the failure modes a
+flaky, rate-limited cloud API actually exhibits — raised errors, stalls
+past any sane deadline, and malformed completions (truncated or
+prose-wrapped JSON) — from a *seeded* schedule, so a chaos run is
+bit-identical across repetitions with the same seed.  Each call's fault
+draw is a function of ``(seed, call index, prompt)``: retries of the same
+prompt redraw (a retry can genuinely succeed), while the schedule itself
+never depends on wall clock or interleaving.
+
+It doubles as the latency-modeled remote client the async-runner roadmap
+item needs: every call draws a simulated latency from
+:class:`LatencyModel` (base + per-prompt-token + per-output-token, with
+seeded jitter), exposed as ``last_latency_s`` per call and accumulated in
+``simulated_s``.  :class:`~repro.core.clients.ResilientClient` reads
+``last_latency_s`` to enforce deterministic per-call timeouts — a "stall"
+fault is simply a draw of ``stall_s`` latency, which a timeout-wrapped
+caller discards and an unwrapped caller survives (slowly), exactly like a
+real hung request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import zlib
+from typing import List, Optional, Sequence, Union
+
+from repro.serving.tokenizer import approx_tokens
+
+
+class InjectedFault(RuntimeError):
+    """An artificial remote failure drawn from a FaultyClient schedule."""
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Simulated remote-call latency: ``base + prompt·per_1k/1000 +
+    max_tokens·per_token``, scaled by ``1 + jitter·U[0,1)``."""
+    base_s: float = 0.05
+    per_1k_prompt_s: float = 0.02
+    per_token_s: float = 0.002
+    jitter: float = 0.2
+
+    def draw(self, rng: random.Random, prompt: str,
+             max_tokens: int) -> float:
+        lat = (self.base_s
+               + self.per_1k_prompt_s * approx_tokens(prompt) / 1000.0
+               + self.per_token_s * max_tokens)
+        return lat * (1.0 + self.jitter * rng.random())
+
+
+class FaultyClient:
+    """Wrap ``client`` with a seeded fault schedule.
+
+    Per call, one uniform draw picks the outcome:
+
+    * ``< error_rate`` — raise :class:`InjectedFault` (API error / 5xx).
+    * ``< error_rate + timeout_rate`` — the call "hangs": latency is
+      ``stall_s`` instead of the model draw; the completion is still
+      produced (the remote did the work — a timeout-wrapping caller just
+      never sees it).
+    * ``< error_rate + timeout_rate + malform_rate`` — the completion is
+      mangled: truncated mid-JSON, fenced-with-prose, or prose-wrapped
+      (exercises :func:`~repro.core.types.extract_json` hardening).
+    * otherwise — clean pass-through at the modeled latency.
+
+    ``complete_batch_outcomes`` gives per-prompt fault attribution (the
+    :class:`~repro.core.runtime.ProtocolRunner` needs it for per-task
+    isolation); ``complete_batch`` keeps plain raise-on-first-fault
+    client semantics.
+    """
+
+    def __init__(self, client, *, seed: int = 0, error_rate: float = 0.0,
+                 timeout_rate: float = 0.0, malform_rate: float = 0.0,
+                 latency: Optional[LatencyModel] = None,
+                 stall_s: float = 60.0):
+        self.client = client
+        self.name = f"faulty:{getattr(client, 'name', 'client')}"
+        self.seed = seed
+        self.error_rate = error_rate
+        self.timeout_rate = timeout_rate
+        self.malform_rate = malform_rate
+        self.latency = latency or LatencyModel()
+        self.stall_s = stall_s
+        self.calls = 0
+        self.errors = 0
+        self.stalls = 0
+        self.malformed = 0
+        self.last_latency_s = 0.0
+        self.simulated_s = 0.0    # total simulated wall time across calls
+
+    def _rng(self, prompt: str) -> random.Random:
+        h = zlib.crc32(prompt.encode("utf-8", "replace"))
+        return random.Random((self.seed << 32) ^ h
+                             ^ (self.calls * 0x9E3779B9))
+
+    def _clock(self, latency_s: float) -> None:
+        self.last_latency_s = latency_s
+        self.simulated_s += latency_s
+
+    @staticmethod
+    def _mangle(out: str, rng: random.Random) -> str:
+        mode = rng.randrange(3)
+        if mode == 0:      # truncated mid-completion (budget/connection cut)
+            cut = max(1, int(len(out) * rng.uniform(0.3, 0.8)))
+            return out[:cut]
+        if mode == 1:      # fenced, with prose on both sides
+            return ("Sure — here is the JSON you asked for:\n"
+                    f"```json\n{out}\n```\nLet me know if you need "
+                    "anything else!")
+        return f"Here is my result: {out} Hope this helps."
+
+    # -- client interface -------------------------------------------------
+    def complete(self, prompt: str, *, temperature: float = 0.0,
+                 max_tokens: int = 256) -> str:
+        rng = self._rng(prompt)
+        self.calls += 1
+        lat = self.latency.draw(rng, prompt, max_tokens)
+        r = rng.random()
+        if r < self.error_rate:
+            self._clock(lat)
+            self.errors += 1
+            raise InjectedFault(
+                f"injected remote error (call {self.calls - 1})")
+        out = self.client.complete(prompt, temperature=temperature,
+                                   max_tokens=max_tokens)
+        if r < self.error_rate + self.timeout_rate:
+            self.stalls += 1
+            self._clock(self.stall_s)
+            return out
+        if r < self.error_rate + self.timeout_rate + self.malform_rate:
+            self.malformed += 1
+            out = self._mangle(out, rng)
+        self._clock(lat)
+        return out
+
+    def complete_batch(self, prompts: Sequence[str], **kw) -> List[str]:
+        return [self.complete(p, **kw) for p in prompts]
+
+    def complete_batch_outcomes(self, prompts: Sequence[str],
+                                **kw) -> List[Union[str, Exception]]:
+        outs: List[Union[str, Exception]] = []
+        for p in prompts:
+            try:
+                outs.append(self.complete(p, **kw))
+            except Exception as e:         # noqa: BLE001 — boundary
+                outs.append(e)
+        return outs

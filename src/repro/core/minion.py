@@ -11,10 +11,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from .prompts import (render_minion_local, render_minion_remote_continue,
+from .prompts import (render_direct, render_minion_local,
+                      render_minion_remote_continue,
                       render_minion_remote_init)
-from .runtime import (Final, LocalBatch, RemoteCall, register_protocol,
-                      run_protocol)
+from .runtime import (Final, LocalBatch, RemoteCall, RemoteFailure,
+                      register_protocol, run_protocol)
 from .types import ProtocolResult, RoundRecord, Usage, extract_json
 
 
@@ -23,6 +24,10 @@ class MinionConfig:
     max_rounds: int = 3
     local_max_tokens: int = 256
     remote_max_tokens: int = 256
+    # "local": if the remote expert drops mid-chat (retry exhaustion /
+    # circuit open), degrade to a local-only direct answer over the full
+    # document; "none": let the failure propagate (task ends "failed")
+    degrade: str = "local"
 
 
 @register_protocol("minion")
@@ -31,14 +36,30 @@ def minion_protocol(task):
     :class:`~repro.core.runtime.TaskContext`; per-round remote usage is
     read off the runner-maintained meter."""
     cfg = task.cfg or MinionConfig()
+    fallback_policy = "degrade" if cfg.degrade == "local" else None
     rounds: List[RoundRecord] = []
     transcript = []
     history_lines: List[str] = []
     answer: Optional[str] = None
 
+    def degrade_local(rnd, failure):
+        """Remote expert gone: answer locally over the full document."""
+        transcript.append({"role": "system", "round": rnd,
+                           "text": f"remote unavailable ({failure}); "
+                                   "degrading to local-only answer"})
+        out = yield LocalBatch([render_direct(task.context, task.query)],
+                               max_tokens=cfg.local_max_tokens)
+        transcript.append({"role": "local", "round": rnd, "text": out[0]})
+        yield Final(out[0].strip() or None, rounds=rounds,
+                    transcript=transcript)
+
     # -- iteration 1: remote initialises -----------------------------------
     init_prompt = render_minion_remote_init(task.query)
-    message = yield RemoteCall(init_prompt, max_tokens=cfg.remote_max_tokens)
+    message = yield RemoteCall(init_prompt, max_tokens=cfg.remote_max_tokens,
+                               fallback=fallback_policy)
+    if isinstance(message, RemoteFailure):
+        yield from degrade_local(0, message)
+        return
     transcript.append({"role": "remote", "round": 0, "text": message})
 
     for rnd in range(cfg.max_rounds):
@@ -58,7 +79,11 @@ def minion_protocol(task):
         cont_prompt = render_minion_remote_continue(
             task.query, response, "\n".join(history_lines[:-2]))
         decision_text = yield RemoteCall(cont_prompt,
-                                         max_tokens=cfg.remote_max_tokens)
+                                         max_tokens=cfg.remote_max_tokens,
+                                         fallback=fallback_policy)
+        if isinstance(decision_text, RemoteFailure):
+            yield from degrade_local(rnd, decision_text)
+            return
         transcript.append({"role": "remote", "round": rnd,
                            "text": decision_text})
         data = extract_json(decision_text) or {}

@@ -16,10 +16,11 @@ import dataclasses
 from typing import List, Optional
 
 from .filtering import filter_outputs
-from .prompts import (format_extractions, render_decompose, render_synthesize,
+from .prompts import (format_extractions, render_decompose,
+                      render_local_synthesis, render_synthesize,
                       render_worker)
-from .runtime import (Final, LocalBatch, RemoteCall, register_protocol,
-                      run_protocol)
+from .runtime import (Final, LocalBatch, RemoteCall, RemoteFailure,
+                      register_protocol, run_protocol)
 from .sandbox import SandboxError, run_decompose_code
 from .types import (JobManifest, JobOutput, ProtocolResult, RoundRecord,
                     Usage, extract_code, extract_json)
@@ -35,6 +36,12 @@ class MinionSConfig:
     max_jobs: int = 512
     worker_temperature: float = 0.2
     worker_max_tokens: int = 256
+    # failure policy when a remote call is exhausted/circuit-open:
+    # "local" degrades gracefully (deterministic fallback jobs for
+    # decompose; local-only synthesis over the kept extractions for
+    # synthesize — the paper's cost/quality tradeoff enacted at runtime);
+    # "none" lets the failure propagate, ending the task "failed"
+    degrade: str = "local"
 
 
 @register_protocol("minions")
@@ -45,6 +52,7 @@ def minions_protocol(task):
     is read off the runner-maintained meter (remote is costed, local is
     metered free, §3)."""
     cfg = task.cfg or MinionSConfig()
+    fallback_policy = "degrade" if cfg.degrade == "local" else None
     rounds: List[RoundRecord] = []
     transcript = []
     scratchpad = ""
@@ -61,19 +69,29 @@ def minions_protocol(task):
         dec_prompt = render_decompose(task.query, rnd + 1, scratchpad,
                                       cfg.pages_per_chunk,
                                       cfg.num_tasks_per_round)
-        code_text = yield RemoteCall(dec_prompt, max_tokens=1024)
-        transcript.append({"role": "remote/decompose", "round": rnd,
-                           "text": code_text})
-        code = extract_code(code_text)
-        try:
-            if code is None:
-                raise SandboxError("no code block in decompose response")
-            jobs = run_decompose_code(code, task.context, last_jobs,
-                                      max_jobs=cfg.max_jobs)
-        except SandboxError as e:
+        code_text = yield RemoteCall(dec_prompt, max_tokens=1024,
+                                     fallback=fallback_policy)
+        if isinstance(code_text, RemoteFailure):
+            # remote decompose unavailable: deterministic protocol-level
+            # fallback jobs keep the round going on local compute alone
             transcript.append({"role": "system", "round": rnd,
-                               "text": f"sandbox error: {e}"})
+                               "text": "remote decompose unavailable "
+                                       f"({code_text}); using fallback "
+                                       "jobs"})
             jobs = _fallback_jobs(task.context, task.query, cfg)
+        else:
+            transcript.append({"role": "remote/decompose", "round": rnd,
+                               "text": code_text})
+            code = extract_code(code_text)
+            try:
+                if code is None:
+                    raise SandboxError("no code block in decompose response")
+                jobs = run_decompose_code(code, task.context, last_jobs,
+                                          max_jobs=cfg.max_jobs)
+            except SandboxError as e:
+                transcript.append({"role": "system", "round": rnd,
+                                   "text": f"sandbox error: {e}"})
+                jobs = _fallback_jobs(task.context, task.query, cfg)
         rec.num_jobs = len(jobs)
 
         # -- Step 2: execute locally in parallel + filter ------------------
@@ -94,7 +112,29 @@ def minions_protocol(task):
         # -- Step 3: aggregate on remote -----------------------------------
         syn_prompt = render_synthesize(task.query, format_extractions(kept),
                                        scratchpad, force_final)
-        syn_text = yield RemoteCall(syn_prompt, max_tokens=512)
+        syn_text = yield RemoteCall(syn_prompt, max_tokens=512,
+                                    fallback=fallback_policy)
+        if isinstance(syn_text, RemoteFailure):
+            # remote synthesize unavailable: degrade to LOCAL-ONLY
+            # synthesis — the kept extractions become a mini-document the
+            # on-device model answers directly, and the task finishes
+            # (degraded) instead of failing
+            transcript.append({"role": "system", "round": rnd,
+                               "text": "remote synthesize unavailable "
+                                       f"({syn_text}); degrading to "
+                                       "local-only synthesis"})
+            local_syn = (yield LocalBatch(
+                [render_local_synthesis(task.query, kept)],
+                max_tokens=cfg.worker_max_tokens))[0]
+            transcript.append({"role": "local/synthesize", "round": rnd,
+                               "text": local_syn})
+            rec.decision = "degraded_local_synthesis"
+            rec.remote_usage = Usage(
+                task.remote_usage.prefill_tokens - usage_before[0],
+                task.remote_usage.decode_tokens - usage_before[1])
+            rounds.append(rec)
+            answer = local_syn.strip() or None
+            break
         transcript.append({"role": "remote/synthesize", "round": rnd,
                            "text": syn_text})
         data = extract_json(syn_text) or {}

@@ -209,3 +209,17 @@ Answer concisely with only the final answer.
 
 def render_direct(context: str, query: str) -> str:
     return DIRECT_TEMPLATE.format(context=context, query=query)
+
+
+def render_local_synthesis(query: str, outputs: List[JobOutput]) -> str:
+    """Degraded-mode synthesis prompt (remote unavailable): the surviving
+    worker extractions become a mini-document for a local direct answer —
+    same section markers as the remote-only baseline, so any local client
+    (real or simulated) parses it like a short document QA."""
+    lines = []
+    for o in outputs:
+        if o.abstained:
+            continue
+        lines.append(o.citation if o.citation else f"{o.answer}")
+    doc = "\n".join(lines) or "(no extractions survived)"
+    return render_direct(doc, query)

@@ -25,6 +25,43 @@ tasks happen to coexist in the pool cannot perturb stochastic sampling.
 Single-task use stays one line via the compatibility wrappers
 (``run_minion`` / ``run_minions`` / ...), which build a one-task runner
 and return the identical :class:`ProtocolResult`.
+
+Failure semantics
+-----------------
+
+The runner is a supervision layer: one task's fault never aborts its
+siblings, and every fault is delivered *to the protocol*, which gets to
+adapt before the runner gives up on it.
+
+* **Task status lifecycle** (``ProtocolResult.status``): every task ends
+  ``"ok"`` | ``"degraded"`` | ``"failed"``.  ``ok`` — completed with no
+  fault delivered.  ``degraded`` — completed although at least one of its
+  actions failed (the exception was thrown into the generator and caught,
+  or a ``fallback="degrade"`` RemoteCall was resumed with a
+  :class:`RemoteFailure`).  ``failed`` — the generator let an exception
+  escape (or raised its own); the error is captured in
+  ``ProtocolResult.error``, usage metered up to the failure is preserved,
+  and the runner keeps driving every other live task.
+
+* **Fault delivery**: ``_service_remote`` resolves each RemoteCall to a
+  per-prompt outcome (:func:`~repro.core.clients.complete_outcomes_any`);
+  an Exception outcome is thrown INTO the protocol generator at its yield
+  point (``gen.throw``), so a protocol can ``try/except`` around a yield
+  and recover mid-flight.  Failed local drain rows arrive the same way.
+
+* **Degradation**: a ``RemoteCall(fallback="degrade")`` never throws — on
+  failure the task is resumed with a :class:`RemoteFailure` value instead
+  and chooses its own fallback (MinionS: local-only synthesis over the
+  surviving worker extractions — the paper's cost/quality tradeoff
+  enacted at runtime).  Degradation events are visible in the task's
+  transcript/round records and in the runner's ``degradations`` counter.
+
+* **Breaker states**: wrap the remote in a
+  :class:`~repro.core.clients.ResilientClient` for retries/timeouts and a
+  closed → open → half-open circuit breaker; every attempt (failed
+  retries included) stays metered.  With a seeded fault schedule
+  (:mod:`repro.core.faults`) and seeded retry jitter, two identical runs
+  are bit-identical — statuses, answers and usage included.
 """
 from __future__ import annotations
 
@@ -32,7 +69,7 @@ import dataclasses
 from typing import (Any, Callable, Dict, Generator, List, Optional, Sequence,
                     Tuple, Union)
 
-from .clients import UsageMeter, complete_batch_any
+from .clients import UsageMeter, complete_batch_any, complete_outcomes_any
 from .types import ProtocolResult, RoundRecord, Usage
 
 # --------------------------------------------------------------------------
@@ -46,10 +83,39 @@ class RemoteCall:
 
     The runner batches RemoteCalls from different tasks that share
     sampling params into one ``complete_batch`` request per step.
-    ``send`` value: the completion text (str)."""
+    ``send`` value: the completion text (str).
+
+    ``fallback`` is the call's failure policy: ``None`` (default) throws
+    the failure into the generator at the yield (catchable); ``"degrade"``
+    resumes the generator with a :class:`RemoteFailure` value instead, so
+    the protocol can gracefully degrade (e.g. local-only synthesis)
+    without exception plumbing."""
     prompt: str
     max_tokens: int = 256
     temperature: float = 0.0
+    fallback: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RemoteFailure:
+    """Resume value delivered for a failed ``RemoteCall`` that carried
+    ``fallback="degrade"``: falsy, carries the underlying exception.
+    Receiving one marks the task ``degraded`` (if it completes)."""
+    error: Exception
+
+    def __bool__(self) -> bool:
+        return False
+
+    def __str__(self) -> str:
+        return f"{type(self.error).__name__}: {self.error}"
+
+
+class _Throw:
+    """Runner-internal reply marker: deliver ``exc`` via ``gen.throw``."""
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: Exception):
+        self.exc = exc
 
 
 @dataclasses.dataclass
@@ -171,14 +237,28 @@ class _LiveTask:
         self.pending: Optional[Action] = None
         self.result: Optional[ProtocolResult] = None
         self.next_job = 0     # per-task job counter -> stable PRNG identity
+        self.faults = 0       # failures delivered (thrown or RemoteFailure)
 
-    def advance(self, value=None, *, first: bool = False) -> None:
+    def advance(self, value=None, *, first: bool = False,
+                throw: bool = False) -> None:
         """Resume the generator until it yields its next awaitable action
-        (or finishes).  ``Final`` terminates the task immediately."""
+        (or finishes).  ``Final`` terminates the task immediately.
+        ``throw=True`` delivers ``value`` (an Exception) via
+        ``gen.throw`` at the yield point; a protocol that doesn't catch
+        it — or raises on its own — ends ``failed``, never aborting its
+        sibling tasks."""
         try:
-            action = next(self.gen) if first else self.gen.send(value)
+            if first:
+                action = next(self.gen)
+            elif throw:
+                action = self.gen.throw(value)
+            else:
+                action = self.gen.send(value)
         except StopIteration:
             self._finish(Final(None))
+            return
+        except Exception as e:             # noqa: BLE001 — isolation wall
+            self._fail(e)
             return
         if isinstance(action, Final):
             self._finish(action)
@@ -196,7 +276,18 @@ class _LiveTask:
             remote_usage=self.ctx.remote_meter.usage,
             local_prefill_tokens=self.ctx.local_meter.usage.prefill_tokens,
             local_decode_tokens=self.ctx.local_meter.usage.decode_tokens,
-            rounds=fin.rounds, transcript=fin.transcript)
+            rounds=fin.rounds, transcript=fin.transcript,
+            status="degraded" if self.faults else "ok")
+
+    def _fail(self, exc: Exception) -> None:
+        self.gen.close()
+        self.pending = None
+        self.result = ProtocolResult(
+            answer=None,
+            remote_usage=self.ctx.remote_meter.usage,
+            local_prefill_tokens=self.ctx.local_meter.usage.prefill_tokens,
+            local_decode_tokens=self.ctx.local_meter.usage.decode_tokens,
+            status="failed", error=f"{type(exc).__name__}: {exc}")
 
 
 # --------------------------------------------------------------------------
@@ -233,6 +324,10 @@ class ProtocolRunner:
         self.seed = seed if seed is not None \
             else getattr(local, "seed", 0)
         self.scheduler = scheduler or self._build_scheduler(local, max_batch)
+        # supervision observability: faults delivered into tasks and how
+        # many of those took a fallback="degrade" path
+        self.faults_delivered = 0
+        self.degradations = 0
 
     @staticmethod
     def _build_scheduler(local, max_batch: int):
@@ -294,7 +389,16 @@ class ProtocolRunner:
             # drain half-dispatched)
             for t, value in replies:
                 t.pending = None
-                t.advance(value)
+                if isinstance(value, _Throw):
+                    t.faults += 1
+                    self.faults_delivered += 1
+                    t.advance(value.exc, throw=True)
+                else:
+                    if isinstance(value, RemoteFailure):
+                        t.faults += 1
+                        self.faults_delivered += 1
+                        self.degradations += 1
+                    t.advance(value)
         return [t.result for t in tasks]
 
     def run_one(self, protocol, context: str, query: str,
@@ -305,7 +409,13 @@ class ProtocolRunner:
     # ------------------------------------------------------------------
     def _service_remote(self, waiters: List[_LiveTask]):
         """One batched remote request per (temperature, max_tokens) class
-        across all waiting tasks; meter each completion into its task."""
+        across all waiting tasks; meter each completion into its task.
+
+        Outcomes are per-prompt (``complete_outcomes_any``): a prompt
+        whose call failed yields an Exception in its slot, which becomes
+        a ``gen.throw`` into that task only — or a :class:`RemoteFailure`
+        resume value if its RemoteCall carried ``fallback="degrade"``.
+        Sibling tasks in the same batch are untouched."""
         if self.remote is None:
             raise RuntimeError("protocol yielded RemoteCall but the runner "
                                "has no remote client")
@@ -313,16 +423,24 @@ class ProtocolRunner:
         for i, t in enumerate(waiters):
             a = t.pending
             groups.setdefault((a.temperature, a.max_tokens), []).append(i)
-        outs: List[Optional[str]] = [None] * len(waiters)
+        outs: List[Any] = [None] * len(waiters)
         for (temp, mt), idxs in groups.items():
-            texts = complete_batch_any(
+            results = complete_outcomes_any(
                 self.remote, [waiters[i].pending.prompt for i in idxs],
                 temperature=temp, max_tokens=mt)
-            for i, text in zip(idxs, texts):
-                outs[i] = text
-        for t, text in zip(waiters, outs):
-            t.ctx.remote_meter.record(t.pending.prompt, text)
-        return list(zip(waiters, outs))
+            for i, res in zip(idxs, results):
+                outs[i] = res
+        replies: List[Tuple[_LiveTask, Any]] = []
+        for t, res in zip(waiters, outs):
+            if isinstance(res, Exception):
+                if t.pending.fallback == "degrade":
+                    replies.append((t, RemoteFailure(res)))
+                else:
+                    replies.append((t, _Throw(res)))
+            else:
+                t.ctx.remote_meter.record(t.pending.prompt, res)
+                replies.append((t, res))
+        return replies
 
     def _service_local(self, waiters: List[_LiveTask]):
         """Merge every task's LocalBatch into ONE shared scheduler drain.
@@ -345,18 +463,34 @@ class ProtocolRunner:
                     rng_id=(t.ctx.task_id, t.next_job)))
                 t.next_job += 1
             tickets.append(ids)
+        try:
+            drained = self.scheduler.drain(seed=self.seed)
+        except Exception as e:             # noqa: BLE001 — isolation wall
+            # a wholesale drain failure (engine crash) fails every waiter
+            # as a task, not the run
+            return [(t, _Throw(e)) for t in waiters]
         by_job: Dict[int, List[str]] = {}
-        for r in self.scheduler.drain(seed=self.seed):
-            by_job.setdefault(r.job_index, []).append(r.text)
+        errors: Dict[int, Exception] = {}
+        for r in drained:
+            if getattr(r, "error", None) is not None:
+                errors.setdefault(r.job_index, r.error)
+            else:
+                by_job.setdefault(r.job_index, []).append(r.text)
         replies = []
         for t, ids in zip(waiters, tickets):
             a = t.pending
             texts: List[str] = []
+            err: Optional[Exception] = None
             for prompt, ji in zip(a.prompts, ids):
+                if err is None and ji in errors:
+                    err = errors[ji]
                 for text in by_job.get(ji, []):
                     t.ctx.local_meter.record(prompt, text)
                     texts.append(text)
-            replies.append((t, texts))
+            # a failed row poisons only its owner's batch: the task gets
+            # the first failure thrown at its yield, siblings their texts
+            replies.append((t, _Throw(err)) if err is not None
+                           else (t, texts))
         return replies
 
 

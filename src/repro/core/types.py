@@ -77,16 +77,31 @@ class RoundRecord:
 
 @dataclasses.dataclass
 class ProtocolResult:
+    """One task's outcome.
+
+    ``status`` is the task's failure-lifecycle terminal state (see
+    :mod:`repro.core.runtime`): ``"ok"`` — completed with no fault
+    delivered; ``"degraded"`` — completed although at least one action
+    failed (the protocol caught the thrown exception or took a
+    ``fallback`` path); ``"failed"`` — the protocol let an exception
+    escape (captured in ``error``; usage metered up to the failure is
+    preserved, ``answer`` is None)."""
     answer: Optional[str]
     remote_usage: Usage
     local_prefill_tokens: int = 0
     local_decode_tokens: int = 0
     rounds: List[RoundRecord] = dataclasses.field(default_factory=list)
     transcript: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    status: str = "ok"
+    error: Optional[str] = None
 
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "failed"
 
 
 # --------------------------------------------------------------------------
@@ -95,14 +110,22 @@ class ProtocolResult:
 
 
 def extract_json(text: str) -> Optional[Dict[str, Any]]:
+    """Pull the first JSON object out of a model completion.
+
+    Tolerates the common real-world wrappings in decreasing order of
+    structure: code fences (with or without a ``json`` tag, prose before
+    and after the fence), the outermost brace span, any object followed
+    by trailing prose (``raw_decode`` scan), and — the chaos-harness
+    case — completions truncated mid-object (open strings/braces are
+    closed and a dangling key gets a null value)."""
     if not text:
         return None
     candidates = []
     if "```" in text:
         parts = text.split("```")
         for i in range(1, len(parts), 2):
-            block = parts[i]
-            if block.startswith("json"):
+            block = parts[i].strip()
+            if block[:4].lower() == "json":
                 block = block[4:]
             candidates.append(block)
     # fall back to outermost brace span
@@ -110,13 +133,79 @@ def extract_json(text: str) -> Optional[Dict[str, Any]]:
     if 0 <= start < end:
         candidates.append(text[start:end + 1])
     for cand in candidates:
+        obj = _loads_dict(cand)
+        if obj is not None:
+            return obj
+    if start < 0:
+        return None
+    # an object followed by prose that itself contains a stray brace
+    # breaks the outermost-span candidate; raw_decode parses the first
+    # complete object and ignores what follows
+    obj = _raw_decode_dict(text, start)
+    if obj is not None:
+        return obj
+    # truncated completion (connection cut / token budget): close open
+    # strings and brackets and retry
+    for repaired in _close_truncated(text[start:]):
+        obj = _loads_dict(repaired)
+        if obj is not None:
+            return obj
+    return None
+
+
+def _loads_dict(cand: str) -> Optional[Dict[str, Any]]:
+    try:
+        obj = json.loads(cand)
+    except (json.JSONDecodeError, ValueError):
+        return None
+    return obj if isinstance(obj, dict) else None
+
+
+def _raw_decode_dict(text: str, start: int,
+                     max_scans: int = 8) -> Optional[Dict[str, Any]]:
+    dec = json.JSONDecoder()
+    pos = start
+    for _ in range(max_scans):
         try:
-            obj = json.loads(cand)
+            obj, _end = dec.raw_decode(text, pos)
             if isinstance(obj, dict):
                 return obj
-        except (json.JSONDecodeError, ValueError):
-            continue
+        except ValueError:
+            pass
+        pos = text.find("{", pos + 1)
+        if pos < 0:
+            return None
     return None
+
+
+def _close_truncated(s: str) -> List[str]:
+    """Repair candidates for a completion cut off mid-JSON: close any
+    open string, then any open braces/brackets; a trailing separator is
+    dropped and a dangling key gets a ``null`` value."""
+    stack: List[str] = []
+    in_str = esc = False
+    for ch in s:
+        if in_str:
+            if esc:
+                esc = False
+            elif ch == "\\":
+                esc = True
+            elif ch == '"':
+                in_str = False
+        elif ch == '"':
+            in_str = True
+        elif ch in "{[":
+            stack.append("}" if ch == "{" else "]")
+        elif ch in "}]" and stack:
+            stack.pop()
+    closers = "".join(reversed(stack))
+    body = (s + '"' if in_str else s).rstrip()
+    if body.endswith(":"):
+        return [body + " null" + closers]
+    if body.endswith(","):
+        return [body[:-1] + closers]
+    # either a complete value or a bare trailing key — try both
+    return [body + closers, body + ": null" + closers]
 
 
 def extract_code(text: str) -> Optional[str]:

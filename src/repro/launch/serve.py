@@ -17,6 +17,13 @@ every runner step drains one shared slot-pool batch holding worker jobs
 from all N requests — the full protocol tier on top of the LocalLM this
 launcher builds.  Without it, the launcher stays the bare LocalLM side
 and the protocol drivers in examples/ compose it with a remote client.
+
+Fault tolerance (with ``--minions``): ``--chaos RATE`` injects a seeded
+fault schedule into the remote (:class:`repro.core.faults.FaultyClient` —
+errors, stalls, malformed completions), and ``--remote-timeout`` /
+``--retries`` wrap it in a :class:`repro.core.clients.ResilientClient`
+(deadline, backoff retries, circuit breaker).  Per-task status
+(ok/degraded/failed) and reliability counters are printed after the run.
 """
 from __future__ import annotations
 
@@ -68,6 +75,18 @@ def main():
                     help="run N concurrent MinionS requests through a "
                          "ProtocolRunner over this engine (simulated "
                          "remote) instead of raw prompts")
+    ap.add_argument("--remote-timeout", type=float, default=None,
+                    metavar="S", help="per-call remote deadline in "
+                    "seconds (with --minions); enforced by the "
+                    "ResilientClient wrapper")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="bounded remote retries with exponential "
+                         "backoff + seeded jitter (with --minions)")
+    ap.add_argument("--chaos", type=float, default=0.0, metavar="RATE",
+                    help="inject a seeded fault schedule into the remote "
+                         "(with --minions): RATE splits 50%% errors / "
+                         "30%% stalls / 20%% malformed completions")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--prompts", nargs="+",
                     default=["The total revenue for fiscal year 2015 was"])
     args = ap.parse_args()
@@ -82,11 +101,29 @@ def main():
                           truncate_long=bool(args.minions))
     if args.minions:
         from repro.core import MinionSConfig, ProtocolRunner, TaskSpec
-        from repro.core.clients import EngineClient
+        from repro.core.clients import EngineClient, ResilientClient
+        from repro.core.faults import FaultyClient
         from repro.core.simulated import ScriptedRemote
         from repro.core.tasks import make_task
+        remote = ScriptedRemote(seed=0)
+        faulty = None
+        if args.chaos:
+            faulty = remote = FaultyClient(
+                remote, seed=args.chaos_seed,
+                error_rate=args.chaos * 0.5, timeout_rate=args.chaos * 0.3,
+                malform_rate=args.chaos * 0.2)
+        resilient = None
+        if args.chaos or args.remote_timeout is not None:
+            # chaos without a timeout would let stalls pass silently —
+            # default the deadline just above the latency model's range
+            timeout = args.remote_timeout
+            if timeout is None:
+                timeout = 10.0
+            resilient = remote = ResilientClient(
+                remote, timeout_s=timeout, max_retries=args.retries,
+                seed=args.chaos_seed)
         runner = ProtocolRunner(EngineClient(engine, max_batch=args.slots),
-                                ScriptedRemote(seed=0))
+                                remote)
         cfg = MinionSConfig(max_rounds=1, num_tasks_per_round=1,
                             pages_per_chunk=1, worker_max_tokens=32)
         tasks = [make_task(700 + i, n_pages=2, kind="extract")
@@ -94,11 +131,22 @@ def main():
         results = runner.run([TaskSpec("minions", t.context, t.query, cfg)
                               for t in tasks])
         for i, r in enumerate(results):
-            print(f"task {i}: answer={r.answer!r} "
+            err = f" error={r.error!r}" if r.error else ""
+            print(f"task {i}: status={r.status} answer={r.answer!r} "
                   f"remote_tok={r.remote_usage.prefill_tokens}+"
-                  f"{r.remote_usage.decode_tokens}")
+                  f"{r.remote_usage.decode_tokens}{err}")
         print(f"pool: {runner.scheduler.drains} drains / "
               f"{runner.scheduler.jobs_drained} worker jobs")
+        if faulty is not None:
+            print(f"chaos: {faulty.calls} calls, {faulty.errors} errors, "
+                  f"{faulty.stalls} stalls, {faulty.malformed} malformed "
+                  f"(simulated {faulty.simulated_s:.1f}s)")
+        if resilient is not None:
+            print(f"resilience: {resilient.stats} | metered attempts: "
+                  f"{resilient.meter.usage}")
+        if runner.faults_delivered:
+            print(f"supervision: {runner.faults_delivered} faults "
+                  f"delivered, {runner.degradations} degradations")
         print(f"usage: {engine.usage}")
         return
     if args.serve:

@@ -47,9 +47,13 @@ from .engine import InferenceEngine
 
 @dataclasses.dataclass
 class ScheduledResult:
+    """One (job, sample) replica's result.  ``error`` is set (and ``text``
+    empty) when the replica's batch failed — a failed batch poisons only
+    its own rows, never the rest of the drain."""
     job_index: int
     sample_index: int
     text: str
+    error: Optional[Exception] = None
 
 
 @dataclasses.dataclass
@@ -180,13 +184,20 @@ class JobScheduler:
         if lanes is None:
             lanes = _replica_lanes(key, expanded)
         if self.engine is not None:
-            texts = self.engine.serve(
-                [p.prompt for _, _, p in expanded],
-                max_new_tokens=[p.max_new_tokens for _, _, p in expanded],
-                temperature=[p.temperature for _, _, p in expanded],
-                key=key, per_job_keys=lanes, slots=self.max_batch)
-            results = [ScheduledResult(ji, si, t)
-                       for (ji, si, _), t in zip(expanded, texts)]
+            try:
+                texts = self.engine.serve(
+                    [p.prompt for _, _, p in expanded],
+                    max_new_tokens=[p.max_new_tokens for _, _, p in expanded],
+                    temperature=[p.temperature for _, _, p in expanded],
+                    key=key, per_job_keys=lanes, slots=self.max_batch)
+            except Exception as e:         # noqa: BLE001 — one SPMD program
+                # the pool is one program: a serve failure is every row's
+                # failure, reported per row instead of wedging the drain
+                results = [ScheduledResult(ji, si, "", e)
+                           for ji, si, _ in expanded]
+            else:
+                results = [ScheduledResult(ji, si, t)
+                           for (ji, si, _), t in zip(expanded, texts)]
         else:
             results = self._drain_grouped(expanded, lanes)
         results.sort(key=lambda r: (r.job_index, r.sample_index))
@@ -218,9 +229,16 @@ class JobScheduler:
             for off in range(0, len(members), self.max_batch):
                 group = members[off:off + self.max_batch]
                 sub = lanes[group[0][0]]
-                texts = self.generate_fn(
-                    [p.prompt for _, (_, _, p) in group], temperature=t,
-                    key=sub, max_new_tokens=b)
+                try:
+                    texts = self.generate_fn(
+                        [p.prompt for _, (_, _, p) in group], temperature=t,
+                        key=sub, max_new_tokens=b)
+                except Exception as e:     # noqa: BLE001 — isolation wall
+                    # the failed batch's rows carry the error; every other
+                    # batch in the drain still runs
+                    results += [ScheduledResult(ji, si, "", e)
+                                for _, (ji, si, _) in group]
+                    continue
                 for (_, (ji, si, _)), text in zip(group, texts):
                     results.append(ScheduledResult(ji, si, text))
         return results

@@ -1,0 +1,541 @@
+"""Fault-tolerance supervision layer: ResilientClient (timeouts, retries,
+circuit breaker), FaultyClient chaos schedules, per-task isolation in the
+ProtocolRunner, graceful degradation, and the hardened JSON extraction.
+
+The deterministic end-to-end chaos runs are marked ``chaos`` (also run by
+``make chaos``); everything here is seeded — no wall-clock dependence."""
+import pytest
+
+from repro.core import (Final, LocalBatch, MinionSConfig, ProtocolRunner,
+                        RemoteCall, RemoteFailure, TaskSpec)
+from repro.core.clients import (BreakerOpen, CallTimeout, EngineClient,
+                                ResilientClient, UsageMeter,
+                                complete_outcomes_any)
+from repro.core.faults import FaultyClient, InjectedFault
+from repro.core.simulated import ScriptedRemote, SimulatedLocal
+from repro.core.tasks import make_dataset
+from repro.core.types import JobOutput, extract_json
+from repro.serving.scheduler import JobScheduler
+from repro.serving.tokenizer import approx_tokens
+
+
+# --------------------------------------------------------------------------
+# micro test clients
+# --------------------------------------------------------------------------
+
+
+class Echo:
+    name = "echo"
+
+    def complete(self, prompt, *, temperature=0.0, max_tokens=256):
+        return f"echo:{prompt}"
+
+
+class FlakyN:
+    """Fails the first ``n`` calls, then succeeds forever."""
+    name = "flaky"
+
+    def __init__(self, n, text="recovered"):
+        self.n = n
+        self.calls = 0
+        self.text = text
+
+    def complete(self, prompt, *, temperature=0.0, max_tokens=256):
+        self.calls += 1
+        if self.calls <= self.n:
+            raise RuntimeError(f"boom {self.calls}")
+        return self.text
+
+
+class AlwaysDown:
+    name = "down"
+
+    def __init__(self):
+        self.calls = 0
+
+    def complete(self, prompt, *, temperature=0.0, max_tokens=256):
+        self.calls += 1
+        raise RuntimeError("remote down")
+
+
+# --------------------------------------------------------------------------
+# FaultyClient: seeded chaos schedule
+# --------------------------------------------------------------------------
+
+
+def _chaos_outcomes(seed):
+    fc = FaultyClient(Echo(), seed=seed, error_rate=0.3, timeout_rate=0.2,
+                      malform_rate=0.2)
+    outs = fc.complete_batch_outcomes([f"prompt {i}" for i in range(24)])
+    rendered = [f"{type(o).__name__}:{o}" if isinstance(o, Exception)
+                else o for o in outs]
+    return rendered, (fc.errors, fc.stalls, fc.malformed,
+                      round(fc.simulated_s, 9))
+
+
+def test_faulty_client_schedule_is_seeded():
+    assert _chaos_outcomes(3) == _chaos_outcomes(3)
+    assert _chaos_outcomes(3) != _chaos_outcomes(4)
+
+
+def test_faulty_client_injects_every_mode():
+    outs, (errors, stalls, malformed, _) = _chaos_outcomes(3)
+    assert errors > 0 and stalls > 0 and malformed > 0
+    assert sum(isinstance(o, str) and o.startswith("InjectedFault")
+               for o in outs) == errors
+
+
+def test_faulty_client_zero_rates_pass_through():
+    fc = FaultyClient(Echo(), seed=9)
+    assert fc.complete("hi") == "echo:hi"
+    assert fc.errors == fc.stalls == fc.malformed == 0
+    assert 0 < fc.last_latency_s < 1.0     # modeled latency, not a stall
+
+
+def test_faulty_client_stall_sets_stall_latency():
+    fc = FaultyClient(Echo(), seed=0, timeout_rate=1.0, stall_s=60.0)
+    out = fc.complete("hi")
+    assert out == "echo:hi"                # the remote DID the work
+    assert fc.last_latency_s == 60.0       # ... the caller just waited
+
+
+def test_faulty_client_batch_raises_but_outcomes_attribute():
+    fc = FaultyClient(Echo(), seed=3, error_rate=0.5)
+    prompts = [f"p{i}" for i in range(12)]
+    outs = fc.complete_batch_outcomes(prompts)
+    assert any(isinstance(o, InjectedFault) for o in outs)
+    assert any(isinstance(o, str) for o in outs)
+    fc2 = FaultyClient(Echo(), seed=3, error_rate=0.5)
+    with pytest.raises(InjectedFault):
+        fc2.complete_batch(prompts)
+
+
+# --------------------------------------------------------------------------
+# ResilientClient: retries, timeouts, metering
+# --------------------------------------------------------------------------
+
+
+def test_retry_recovers_and_meters_every_attempt():
+    rc = ResilientClient(FlakyN(2), max_retries=2, seed=0)
+    out = rc.complete("question")
+    assert out == "recovered"
+    s = rc.stats
+    assert (s.attempts, s.failures, s.retries, s.successes) == (3, 2, 2, 1)
+    assert s.exhausted == 0
+    # every wire attempt is on the bill exactly once: the two failed
+    # attempts paid their prompt tokens (empty completion), the success
+    # paid prompt + completion
+    assert len(rc.meter.calls) == 3
+    pt = approx_tokens("question")
+    assert [c.prompt_tokens for c in rc.meter.calls] == [pt, pt, pt]
+    assert rc.meter.calls[0].completion_tokens == approx_tokens("")
+    assert rc.meter.calls[2].completion_tokens == \
+        approx_tokens("recovered")
+    assert s.backoff_s > 0                 # virtual backoff accrued
+
+
+def test_retry_exhaustion_raises_last_error():
+    rc = ResilientClient(FlakyN(10), max_retries=2, seed=0)
+    with pytest.raises(RuntimeError, match="boom 3"):
+        rc.complete("q")
+    assert rc.stats.exhausted == 1
+    assert rc.stats.attempts == 3
+
+
+def test_cooperative_timeout_from_latency_model():
+    fc = FaultyClient(Echo(), seed=0, timeout_rate=1.0, stall_s=60.0)
+    rc = ResilientClient(fc, timeout_s=2.0, max_retries=1, seed=0)
+    with pytest.raises(CallTimeout):
+        rc.complete("q")
+    assert rc.stats.timeouts == 2          # initial attempt + 1 retry
+    assert rc.stats.attempts == 2
+    # the stalled attempts still paid their prompts
+    assert len(rc.meter.calls) == 2
+
+
+def test_backoff_is_seeded():
+    def total_backoff(seed):
+        rc = ResilientClient(FlakyN(3), max_retries=3, seed=seed)
+        rc.complete("q")
+        return rc.stats.backoff_s
+    assert total_backoff(1) == total_backoff(1)
+    assert total_backoff(1) != total_backoff(2)
+
+
+def test_batch_outcomes_give_each_prompt_its_own_retry_budget():
+    fc = FaultyClient(Echo(), seed=3, error_rate=0.45)
+    rc = ResilientClient(fc, max_retries=3, seed=0, breaker_threshold=100)
+    prompts = [f"p{i}" for i in range(10)]
+    outs = rc.complete_batch_outcomes(prompts)
+    assert len(outs) == 10
+    # retries redraw the fault schedule, so most prompts recover
+    ok = [o for o in outs if isinstance(o, str)]
+    assert len(ok) >= 8
+    assert all(o == f"echo:p{i}" for i, o in enumerate(outs)
+               if isinstance(o, str))
+    assert rc.stats.retries > 0
+
+
+# --------------------------------------------------------------------------
+# circuit breaker lifecycle
+# --------------------------------------------------------------------------
+
+
+def test_breaker_opens_and_fast_fails_without_touching_client():
+    down = AlwaysDown()
+    rc = ResilientClient(down, max_retries=0, breaker_threshold=3,
+                         breaker_cooldown=10, seed=0)
+    for _ in range(3):
+        with pytest.raises(RuntimeError, match="remote down"):
+            rc.complete("q")
+    assert rc.stats.state == "open"
+    assert rc.stats.breaker_opens == 1
+    wire_calls = down.calls
+    metered = len(rc.meter.calls)
+    with pytest.raises(BreakerOpen):
+        rc.complete("q")
+    assert down.calls == wire_calls        # never touched the wire
+    assert len(rc.meter.calls) == metered  # fast-fails are not metered
+    assert rc.stats.fast_failures == 1
+
+
+def test_breaker_half_open_probe_closes_on_success():
+    flaky = FlakyN(3)
+    rc = ResilientClient(flaky, max_retries=0, breaker_threshold=3,
+                         breaker_cooldown=2, seed=0)
+    for _ in range(3):
+        with pytest.raises(RuntimeError):
+            rc.complete("q")
+    assert rc.stats.state == "open"
+    # cooldown is counted in rejected calls: the first fast-fails, the
+    # second is admitted as the half-open probe — and succeeds
+    with pytest.raises(BreakerOpen):
+        rc.complete("q")
+    assert rc.complete("q") == "recovered"
+    assert rc.stats.state == "closed"
+    assert rc.stats.consecutive_failures == 0
+
+
+def test_breaker_half_open_probe_failure_reopens():
+    rc = ResilientClient(AlwaysDown(), max_retries=0, breaker_threshold=2,
+                         breaker_cooldown=1, seed=0)
+    for _ in range(2):
+        with pytest.raises(RuntimeError):
+            rc.complete("q")
+    assert rc.stats.state == "open"
+    with pytest.raises(RuntimeError):      # admitted probe, fails
+        rc.complete("q")
+    assert rc.stats.state == "open"
+    assert rc.stats.breaker_opens == 2
+
+
+# --------------------------------------------------------------------------
+# outcome dispatch + metering invariants
+# --------------------------------------------------------------------------
+
+
+def test_plain_client_outcomes_replicate_batch_failure():
+    outs = complete_outcomes_any(AlwaysDown(), ["a", "b", "c"])
+    assert len(outs) == 3
+    assert all(isinstance(o, RuntimeError) for o in outs)
+    assert complete_outcomes_any(Echo(), ["a", "b"]) == ["echo:a", "echo:b"]
+
+
+def test_nested_meter_over_resilient_counts_once():
+    rc = ResilientClient(Echo(), seed=0)
+    outer = UsageMeter(rc)
+    outs = outer.complete_batch(["one", "two"])
+    assert outs == ["echo:one", "echo:two"]
+    # each boundary crossing counted once per meter in the chain
+    assert len(outer.calls) == 2
+    assert len(rc.meter.calls) == 2
+    assert outer.usage.prefill_tokens == rc.meter.usage.prefill_tokens
+
+
+def test_empty_submissions_return_empty():
+    sched = JobScheduler(lambda prompts, **kw: list(prompts))
+    assert sched.drain() == []
+    assert sched.drains == 0               # an empty drain is not a drain
+    assert EngineClient(None).complete_batch([]) == []
+
+
+# --------------------------------------------------------------------------
+# runner supervision: isolation, throw delivery, degradation
+# --------------------------------------------------------------------------
+
+
+def _ok_proto(task):
+    out = yield RemoteCall("hello")
+    yield Final(out)
+
+
+def test_failing_task_never_aborts_siblings():
+    def bad_proto(task):
+        raise RuntimeError("task exploded")
+        yield  # pragma: no cover — generator marker
+
+    runner = ProtocolRunner(None, Echo())
+    solo = ProtocolRunner(None, Echo()).run(
+        [TaskSpec(_ok_proto, "", "q")])[0]
+    res = runner.run([TaskSpec(bad_proto, "", "q"),
+                      TaskSpec(_ok_proto, "", "q"),
+                      TaskSpec(bad_proto, "", "q")])
+    assert [r.status for r in res] == ["failed", "ok", "failed"]
+    assert res[0].answer is None
+    assert "RuntimeError: task exploded" in res[0].error
+    # the surviving sibling is untouched by its neighbours' failures
+    assert res[1].answer == solo.answer == "echo:hello"
+    assert res[1].error is None
+
+
+def test_remote_fault_is_thrown_into_the_generator():
+    def catching(task):
+        try:
+            out = yield RemoteCall("q")
+        except RuntimeError as e:
+            out = f"caught:{e}"
+        yield Final(out)
+
+    runner = ProtocolRunner(None, AlwaysDown())
+    res = runner.run([TaskSpec(catching, "", "q")])[0]
+    assert res.status == "degraded"        # completed despite the fault
+    assert res.answer == "caught:remote down"
+    assert runner.faults_delivered == 1
+
+
+def test_uncaught_remote_fault_fails_only_that_task():
+    runner = ProtocolRunner(None, AlwaysDown())
+    res = runner.run([TaskSpec(_ok_proto, "", "q")])[0]
+    assert res.status == "failed"
+    assert "remote down" in res.error
+
+
+def test_degrade_fallback_resumes_with_remote_failure():
+    def degrading(task):
+        out = yield RemoteCall("q", fallback="degrade")
+        if isinstance(out, RemoteFailure):
+            out = f"fallback ({out})"
+        yield Final(out)
+
+    runner = ProtocolRunner(None, AlwaysDown())
+    res = runner.run([TaskSpec(degrading, "", "q")])[0]
+    assert res.status == "degraded"
+    assert res.answer.startswith("fallback (RuntimeError")
+    assert runner.degradations == 1
+    # fault-free path: the same protocol over a healthy remote stays "ok"
+    ok = ProtocolRunner(None, Echo()).run([TaskSpec(degrading, "", "q")])[0]
+    assert (ok.status, ok.answer) == ("ok", "echo:q")
+
+
+def test_local_fault_delivered_only_to_owning_task():
+    class PickyLocal:
+        name = "picky"
+
+        def complete_batch(self, prompts, *, temperature=0.0,
+                           max_tokens=256):
+            if any("bad" in p for p in prompts):
+                raise RuntimeError("worker crashed")
+            return [p.upper() for p in prompts]
+
+    def local_proto(tag):
+        def proto(task):
+            outs = yield LocalBatch([f"{tag} job"])
+            yield Final(outs[0])
+        return proto
+
+    # max_batch=1: each job is its own batch, so the bad job's failure
+    # must reach only its owner
+    runner = ProtocolRunner(PickyLocal(), None, max_batch=1)
+    res = runner.run([TaskSpec(local_proto("good"), "", "q"),
+                      TaskSpec(local_proto("bad"), "", "q")])
+    assert res[0].status == "ok"
+    assert res[0].answer == "GOOD JOB"
+    assert res[1].status == "failed"
+    assert "worker crashed" in res[1].error
+
+
+def test_empty_local_batch_resumes_with_empty_list():
+    def proto(task):
+        outs = yield LocalBatch([])
+        yield Final("empty" if outs == [] else "nonempty")
+
+    res = ProtocolRunner(Echo(), None).run([TaskSpec(proto, "", "q")])[0]
+    assert res.answer == "empty"
+
+
+def test_failed_task_preserves_metered_usage():
+    def pay_then_fail(task):
+        yield RemoteCall("first call succeeds")
+        raise RuntimeError("then we die")
+
+    res = ProtocolRunner(None, Echo()).run(
+        [TaskSpec(pay_then_fail, "", "q")])[0]
+    assert res.status == "failed"
+    assert res.remote_usage.prefill_tokens > 0   # the paid call stays billed
+
+
+# --------------------------------------------------------------------------
+# MinionS end-to-end degradation
+# --------------------------------------------------------------------------
+
+
+def _minions_run(remote, *, degrade="local", n=2, max_rounds=1):
+    tasks = make_dataset(n, seed=23, n_pages=6)
+    local = SimulatedLocal("llama-8b", seed=0)
+    runner = ProtocolRunner(local, remote)
+    cfg = MinionSConfig(max_rounds=max_rounds, degrade=degrade)
+    res = runner.run([TaskSpec("minions", t.context, t.query, cfg,
+                               task_id=i) for i, t in enumerate(tasks)])
+    return res, runner
+
+
+def test_minions_degrades_to_local_synthesis_when_remote_is_down():
+    res, runner = _minions_run(AlwaysDown(), degrade="local")
+    assert all(r.status == "degraded" for r in res)
+    assert all(r.answer for r in res)      # local-only synthesis answered
+    assert runner.degradations > 0
+    notes = [e["text"] for r in res for e in r.transcript
+             if e["role"] == "system"]
+    assert any("degrading to local-only synthesis" in t for t in notes)
+
+
+def test_minions_degrade_none_lets_the_failure_propagate():
+    res, _ = _minions_run(AlwaysDown(), degrade="none")
+    assert all(r.status == "failed" for r in res)
+    assert all(r.answer is None for r in res)
+    assert all("remote down" in r.error for r in res)
+
+
+def test_fault_free_wrapped_remote_is_byte_identical_to_plain():
+    """rate-0 chaos + resilience wrappers must not perturb anything."""
+    def fingerprint(remote):
+        res, _ = _minions_run(remote, n=3, max_rounds=2)
+        return [(r.status, r.answer, r.remote_usage.prefill_tokens,
+                 r.remote_usage.decode_tokens, r.local_prefill_tokens,
+                 r.local_decode_tokens) for r in res]
+
+    plain = fingerprint(ScriptedRemote(seed=0))
+    wrapped = fingerprint(ResilientClient(
+        FaultyClient(ScriptedRemote(seed=0), seed=7),
+        timeout_s=120.0, max_retries=2, seed=7))
+    assert plain == wrapped
+    assert all(s == "ok" for s, *_ in plain)
+
+
+# --------------------------------------------------------------------------
+# the chaos acceptance run (make chaos)
+# --------------------------------------------------------------------------
+
+
+def _chaos_fleet(seed):
+    """8 concurrent MinionS tasks over a seeded ~30% error+timeout remote
+    behind the full resilience stack; returns comparable fingerprints."""
+    tasks = make_dataset(8, seed=17, n_pages=8)
+    local = SimulatedLocal("llama-8b", seed=0)
+    faulty = FaultyClient(ScriptedRemote(seed=0), seed=seed,
+                          error_rate=0.2, timeout_rate=0.1)
+    # deadline above the clean latency envelope (a 1024-token decompose
+    # draws ~2.1-2.5s) but far below a stall: only injected faults trip it
+    remote = ResilientClient(faulty, timeout_s=4.0, max_retries=2,
+                             seed=seed, breaker_threshold=6,
+                             breaker_cooldown=8)
+    runner = ProtocolRunner(local, remote)
+    cfg = MinionSConfig(max_rounds=2)
+    res = runner.run([TaskSpec("minions", t.context, t.query, cfg,
+                               task_id=i) for i, t in enumerate(tasks)])
+    fp = [(r.status, r.answer, r.error, r.remote_usage.prefill_tokens,
+           r.remote_usage.decode_tokens, r.local_prefill_tokens,
+           r.local_decode_tokens) for r in res]
+    counters = (faulty.calls, faulty.errors, faulty.stalls,
+                remote.stats.attempts, remote.stats.retries,
+                remote.stats.timeouts, remote.stats.breaker_opens,
+                round(remote.stats.backoff_s, 9), runner.faults_delivered,
+                runner.degradations)
+    return fp, counters
+
+
+@pytest.mark.chaos
+def test_chaos_fleet_completes_all_tasks_bit_identically():
+    fp1, counters1 = _chaos_fleet(seed=5)
+    # zero sibling aborts: every task reports a terminal status
+    assert len(fp1) == 8
+    assert all(s in ("ok", "degraded", "failed") for s, *_ in fp1)
+    # the schedule actually injected faults and the stack absorbed work
+    assert counters1[1] > 0 or counters1[2] > 0    # errors or stalls
+    assert counters1[4] > 0                        # retries happened
+    # supervision outcome: most of the fleet still answers
+    answered = sum(a is not None for _, a, *_ in fp1)
+    assert answered >= 6
+    # bit-identical rerun: same seed, fresh clients — same statuses,
+    # answers, errors, usage and reliability counters
+    fp2, counters2 = _chaos_fleet(seed=5)
+    assert fp1 == fp2
+    assert counters1 == counters2
+
+
+@pytest.mark.chaos
+def test_chaos_fleet_differs_across_seeds():
+    """Different fault seeds genuinely reshuffle the schedule (guards
+    against the schedule silently ignoring its seed)."""
+    assert _chaos_fleet(seed=5)[1] != _chaos_fleet(seed=11)[1]
+
+
+# --------------------------------------------------------------------------
+# hardened JSON extraction (the malformed-completion fault mode)
+# --------------------------------------------------------------------------
+
+
+def test_extract_json_fenced_with_prose():
+    text = ('Sure — here is the JSON you asked for:\n'
+            '```json\n{"answer": "42", "explanation": "found"}\n```\n'
+            'Let me know if you need anything else!')
+    assert extract_json(text) == {"answer": "42", "explanation": "found"}
+
+
+def test_extract_json_trailing_prose_with_stray_brace():
+    text = '{"answer": "7"} — hope this helps! (see {appendix)'
+    assert extract_json(text) == {"answer": "7"}
+
+
+def test_extract_json_truncated_value():
+    assert extract_json('{"explanation": "found it", "answer": "4') == \
+        {"explanation": "found it", "answer": "4"}
+
+
+def test_extract_json_truncated_after_key():
+    assert extract_json('{"explanation": "x", "answer":') == \
+        {"explanation": "x", "answer": None}
+
+
+def test_extract_json_truncated_mid_key():
+    assert extract_json('{"explanation": "x", "answ') == \
+        {"explanation": "x", "answ": None}
+
+
+def test_extract_json_truncated_nested():
+    text = '{"decision": "continue", "jobs": [{"task": "find the'
+    obj = extract_json(text)
+    assert obj is not None and obj["decision"] == "continue"
+
+
+def test_extract_json_plain_and_garbage():
+    assert extract_json('{"a": 1}') == {"a": 1}
+    assert extract_json("no json here") is None
+    assert extract_json("") is None
+
+
+def test_job_output_tolerates_mangled_worker_completions():
+    import random as _random
+    clean = ('{"explanation": "revenue found", "citation": "page 3", '
+             '"answer": "12"}')
+    modes_seen = set()
+    for seed in range(12):
+        rng = _random.Random(seed)
+        mode = _random.Random(seed).randrange(3)   # _mangle's first draw
+        mangled = FaultyClient._mangle(clean, rng)
+        modes_seen.add(mode)
+        out = JobOutput.from_json_text(mangled)    # must never raise
+        assert isinstance(out, JobOutput)
+        if mode != 0:   # fence/prose wrapping must stay fully recoverable
+            assert extract_json(mangled) == extract_json(clean)
+    assert modes_seen == {0, 1, 2}
