@@ -11,9 +11,10 @@ PYTEST ?= python -m pytest
 
 .PHONY: smoke full bench chaos
 
-# sub-minute loop: everything not marked slow (includes the 2-cell
-# equivalence smoke subset and the fast protocol cross-task-batching
-# scenario)
+# sub-minute loop: everything not marked slow (includes the equivalence
+# smoke subset — sharded serve, pallas packed, paged serve with radix
+# reuse — plus the paging property tests and the fast protocol
+# cross-task-batching scenario)
 smoke:
 	$(PYTEST) -q -m "not slow"
 
@@ -28,8 +29,8 @@ chaos:
 	$(PYTEST) -q -m chaos
 
 # engine benchmark scenarios (fused decode, packing, continuous batching,
-# sharded-vs-single-device serve); rewrites BENCH_engine.json and
-# experiments/bench_results.csv
+# paged-vs-dense prefix reuse, sharded-vs-single-device serve); rewrites
+# BENCH_engine.json and experiments/bench_results.csv
 bench:
 	python -m benchmarks.run --only engine
 

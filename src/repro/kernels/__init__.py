@@ -2,9 +2,12 @@
 
 chunked_prefill — block-diagonal flash attention over concatenated job
 chunks (the parallel-jobs prefill); gqa_decode — grouped single-token
-decode attention vs. a KV cache.  Both validated against the pure-jnp
-oracles in ref.py (interpret=True on CPU).
+decode attention vs. a KV cache.  paged_prefill / paged_gqa_decode —
+the same two shapes against a shared page pool, gathering K/V through a
+per-row page table (the engine's prefix-reuse mode).  All validated
+against the pure-jnp oracles in ref.py (interpret=True on CPU).
 """
-from .ops import chunked_prefill, gqa_decode
+from .ops import chunked_prefill, gqa_decode, paged_gqa_decode, paged_prefill
 
-__all__ = ["chunked_prefill", "gqa_decode"]
+__all__ = ["chunked_prefill", "gqa_decode", "paged_gqa_decode",
+           "paged_prefill"]

@@ -152,3 +152,121 @@ def chunked_prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         compiler_params=compiler_params,
         interpret=interpret,
     )(q, k, v, segment_ids, segment_ids)
+
+
+def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, pos_ref, out_ref,
+                  acc_ref, m_ref, l_ref, *, block_q: int, page_size: int,
+                  sm_scale: float, num_kv_pages: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qpos = pos_ref[0, :]                          # (block_q,) global pos
+    # skip pages entirely in the causal future of every query in the tile
+    live = kj * page_size <= jnp.max(qpos)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale   # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (ps, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = kj * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        # position-based causality: queries see the whole cached prefix
+        # plus earlier (already-scattered) suffix tokens; slots beyond the
+        # prompt hold stale pool data and satisfy kpos > qpos
+        s = jnp.where(kpos <= qpos[:, None], s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(kj == num_kv_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        out_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def paged_prefill_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                            positions: jnp.ndarray, *, block_q: int = 128,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Suffix prefill against a paged cache: each row's queries (the novel
+    suffix of its prompt, at global ``positions``) attend to K/V gathered
+    through its page table — shared prefix pages are streamed from the
+    pool, never re-prefilled.  The suffix's own K/V must already be
+    scattered into the pool (slot j holds position j's key), so a single
+    position-based causal mask covers prefix and intra-suffix attention.
+
+    q: (B, S, H, hd); pools (num_pages, page_size, Hkv, hd) at native kv
+    head count; page_table (B, P) int32 (0 = null page); positions (B, S)
+    int32 (left-pad queries with position 0 — they attend only slot 0 and
+    the caller drops their output).  The KV block is one page.  S must be
+    a multiple of block_q (ops.py pads).  Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert s % block_q == 0, (s, block_q)
+    nq = s // block_q
+    p_max = page_table.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, block_q=block_q, page_size=ps,
+                               sm_scale=sm_scale, num_kv_pages=p_max)
+
+    compiler_params = None
+    cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cp_cls is not None:
+        compiler_params = cp_cls(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nq, p_max),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bb, hh, qi, kj, pt: (bb, qi, hh, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda bb, hh, qi, kj, pt:
+                         (pt[bb, kj], 0, hh // group, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda bb, hh, qi, kj, pt:
+                         (pt[bb, kj], 0, hh // group, 0)),
+            pl.BlockSpec((1, block_q),
+                         lambda bb, hh, qi, kj, pt: (bb, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bb, hh, qi, kj, pt: (bb, qi, hh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(page_table, q, k_pool, v_pool, positions)

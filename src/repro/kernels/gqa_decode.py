@@ -140,3 +140,118 @@ def gqa_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
         interpret=interpret,
     )(start, valid_len, qg, k_cache, v_cache)
     return out.reshape(b, h, hd)
+
+
+def _paged_kernel(pt_ref, valid_ref, q_ref, k_ref, v_ref, out_ref,
+                  acc_ref, m_ref, l_ref, *, page_size: int, sm_scale: float,
+                  num_kv_pages: int, group: int):
+    bb = pl.program_id(0)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[bb]
+    # skip pages entirely at/after the row's write frontier (padded page
+    # table entries point at the null page and are always dead here)
+    live = kj * page_size < valid
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * sm_scale  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (ps, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, ps)
+        kpos = kj * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(kj == num_kv_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        out_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gqa_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                               valid_len: jnp.ndarray, *,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Paged variant: K/V live in a shared page pool and each row gathers
+    its cache through a page table delivered via scalar prefetch — the K/V
+    index maps translate the grid's page coordinate to a physical page, so
+    rows sharing prefix pages stream the same HBM tiles.
+
+    q: (B, H, hd); pools: (num_pages, page_size, Hkv, hd); page_table:
+    (B, P) int32 physical page per logical page (0 = null page); valid_len:
+    (B,) int32 — slot j of row b (page j // page_size) holds the KV of
+    global position j, positions >= valid_len are masked.  The KV block is
+    one page (block_k == page_size).  Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    assert h % hkv == 0
+    group = h // hkv
+    p_max = page_table.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, hkv, group, hd)
+
+    kernel = functools.partial(_paged_kernel, page_size=ps,
+                               sm_scale=sm_scale, num_kv_pages=p_max,
+                               group=group)
+
+    compiler_params = None
+    cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cp_cls is not None:
+        compiler_params = cp_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda bb, kh, kj, pt, valid: (bb, kh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda bb, kh, kj, pt, valid:
+                         (pt[bb, kj], 0, kh, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda bb, kh, kj, pt, valid:
+                         (pt[bb, kj], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda bb, kh, kj, pt, valid:
+                               (bb, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(page_table, valid_len, qg, k_pool, v_pool)
+    return out.reshape(b, h, hd)

@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .chunked_prefill import chunked_prefill_attention
-from .gqa_decode import gqa_decode_attention
+from .chunked_prefill import chunked_prefill_attention, paged_prefill_attention
+from .gqa_decode import gqa_decode_attention, paged_gqa_decode_attention
 
 PAD_SEGMENT = -1
 
@@ -80,3 +80,46 @@ def gqa_decode(q, k_cache, v_cache, valid_len, *, start=None,
     out = gqa_decode_attention(q, k_cache, v_cache, valid_len, start,
                                block_k=block_k, interpret=interpret)
     return out[:, None] if squeeze else out
+
+
+def paged_gqa_decode(q, k_pool, v_pool, page_table, valid_len, *,
+                     interpret=None):
+    """Paged GQA decode attention.  q: (B,H,hd) or (B,1,H,hd); pools
+    (num_pages, page_size, Hkv, hd); page_table (B,P) int32 (0 = null
+    page); valid_len scalar or (B,).
+
+    No padding needed: the KV block is one page and padded page-table
+    columns point at the null page, masked by ``valid_len``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    squeeze = False
+    if q.ndim == 4:
+        q = q[:, 0]
+        squeeze = True
+    b = q.shape[0]
+    valid_len = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    out = paged_gqa_decode_attention(q, k_pool, v_pool, page_table,
+                                     valid_len, interpret=interpret)
+    return out[:, None] if squeeze else out
+
+
+def paged_prefill(q, k_pool, v_pool, page_table, positions, *,
+                  block_q: int = 128, interpret=None):
+    """Paged suffix-prefill attention: (B,S,H,hd) queries at global
+    ``positions`` (B,S) against K/V gathered through ``page_table``
+    (suffix K/V already scattered into the pool).  Queries are padded to
+    the block size with position 0 (they attend only slot 0 — finite
+    softmax — and their output is sliced off)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, hd = q.shape
+    pad = (-s) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    out = paged_prefill_attention(q, k_pool, v_pool, page_table, positions,
+                                  block_q=block_q, interpret=interpret)
+    return out[:, :s]

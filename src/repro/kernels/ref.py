@@ -32,6 +32,57 @@ def chunked_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_gather(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialise a dense per-row view of a paged cache.
+
+    pool: (num_pages, page_size, Hkv, hd); page_table: (B, P) int32 page
+    ids (0 = null page).  Returns (B, P*page_size, Hkv, hd) where slot j
+    of row b holds the KV written for that row's global position j.
+    """
+    b, p = page_table.shape
+    _, ps, hkv, hd = pool.shape
+    return pool[page_table].reshape(b, p * ps, hkv, hd)
+
+
+def paged_gqa_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                         v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                         valid_len: jnp.ndarray) -> jnp.ndarray:
+    """Paged decode oracle: gather K/V through the page table, then run the
+    dense GQA decode reference.  q: (B, H, hd); pools
+    (num_pages, page_size, Hkv, hd); valid_len: (B,) valid slot count."""
+    kc = paged_gather(k_pool, page_table)
+    vc = paged_gather(v_pool, page_table)
+    return gqa_decode_ref(q, kc, vc, valid_len)
+
+
+def paged_prefill_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                      v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                      positions: jnp.ndarray) -> jnp.ndarray:
+    """Paged suffix-prefill oracle.
+
+    q: (B, S, H, hd) suffix queries at global positions ``positions``
+    (B, S) int32; the suffix's own K/V must already be scattered into the
+    pool, so slot j of the gathered view holds position j's key.  Causal
+    mask is position-based (``kpos <= qpos``): queries attend to the whole
+    cached prefix plus earlier suffix tokens.  Left-pad queries with
+    position 0 — they attend only slot 0 (finite softmax) and are sliced
+    off by the caller.  Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    kc = paged_gather(k_pool, page_table).astype(jnp.float32)
+    vc = paged_gather(v_pool, page_table).astype(jnp.float32)
+    hkv = kc.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg, kc) / math.sqrt(hd)
+    kpos = jnp.arange(kc.shape[1])
+    mask = kpos[None, None, :] <= positions[:, :, None]          # (B, S, L)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", probs, vc)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
 def gqa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                    valid_len: jnp.ndarray,
                    start: Optional[jnp.ndarray] = None) -> jnp.ndarray:

@@ -10,6 +10,9 @@ remaining devices form the "data" axis that decode rows shard over).  Run
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to smoke-test
 an 8-device layout on CPU.  ``--serve`` routes the prompts through the
 continuously-batched slot pool instead of one convoy ``generate_batch``.
+``--paged`` (with ``--page-size`` / ``--num-pages``) switches the KV
+cache to the shared page pool with radix prefix reuse — prompts sharing
+an instruction prefix prefill only their novel suffix.
 
 ``--minions N`` runs N synthetic MinionS requests CONCURRENTLY through a
 :class:`repro.core.ProtocolRunner` over this engine (simulated remote):
@@ -39,11 +42,14 @@ from repro.training import load
 
 def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
                  max_seq_len: int = 4096, seed: int = 0, mesh=None,
-                 truncate_long: bool = False) -> InferenceEngine:
+                 truncate_long: bool = False, paged: bool = False,
+                 page_size: int = 64, num_pages: int = 512) -> InferenceEngine:
     """``mesh``: None (single device), a ``jax.sharding.Mesh``, or
     ``"auto"`` for the host mesh — passed straight through to the engine.
     ``truncate_long`` clips over-long prompts instead of raising (useful
-    when protocol-generated worker chunks can exceed the window)."""
+    when protocol-generated worker chunks can exceed the window).
+    ``paged`` switches the KV cache to the shared page pool with radix
+    prefix reuse (``page_size`` tokens per page, ``num_pages`` total)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     cfg = cfg.replace(vocab_size=max(512, min(cfg.vocab_size, 512)))
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
@@ -51,7 +57,8 @@ def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
         params, meta = load(checkpoint, params)
         print(f"loaded checkpoint ({meta})")
     return InferenceEngine(cfg, params, max_seq_len=max_seq_len, mesh=mesh,
-                           truncate_long=truncate_long)
+                           truncate_long=truncate_long, paged=paged,
+                           page_size=page_size, num_pages=num_pages)
 
 
 def main():
@@ -71,6 +78,14 @@ def main():
                          "convoy generate_batch")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode rows in the serve pool (with --serve)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: fixed-size page pool + radix "
+                         "prefix index, reusing shared prompt prefixes "
+                         "across jobs and calls")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--num-pages", type=int, default=512,
+                    help="page-pool capacity in pages (with --paged)")
     ap.add_argument("--minions", type=int, default=0, metavar="N",
                     help="run N concurrent MinionS requests through a "
                          "ProtocolRunner over this engine (simulated "
@@ -98,7 +113,9 @@ def main():
         print(f"mesh: {dict(mesh.shape)}")
     engine = build_engine(args.arch, smoke=args.smoke,
                           checkpoint=args.checkpoint, mesh=mesh,
-                          truncate_long=bool(args.minions))
+                          truncate_long=bool(args.minions),
+                          paged=args.paged, page_size=args.page_size,
+                          num_pages=args.num_pages)
     if args.minions:
         from repro.core import MinionSConfig, ProtocolRunner, TaskSpec
         from repro.core.clients import EngineClient, ResilientClient

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import kernels as pallas_kernels
+from repro.kernels import ref as kernels_ref
 
 from . import moe as moe_lib
 from . import ssm as ssm_lib
@@ -623,7 +624,13 @@ def _decode_layer(lp: Params, lc: Cache, x, cfg: ModelConfig, kind: str,
 
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                 cache: Cache) -> Tuple[jnp.ndarray, Cache]:
-    """One decode step.  token: (B, 1) int32 -> logits (B, 1, V)."""
+    """One decode step.  token: (B, 1) int32 -> logits (B, 1, V).
+
+    Dispatches on the cache structure: a paged cache (page pool + per-row
+    page tables, see ``init_paged_cache``) routes to the paged decode
+    path; the dense per-row cache keeps the original layout."""
+    if "page_table" in cache:
+        return _paged_decode_step(params, cfg, token, cache)
     b = token.shape[0]
     pos = cache["pos"]
     positions = jnp.broadcast_to(pos[None, None], (b, 1))
@@ -678,6 +685,140 @@ def _cached_cross(attn_p, cfg, h, lc):
                            repeat_kv(lc["cv"], cfg.q_per_kv),
                            jnp.asarray(lc["ck"].shape[1], jnp.int32))
     return out.reshape(b, 1, cfg.num_heads * hd) @ attn_p["wo"]
+
+
+# ===========================================================================
+# paged KV cache (shared page pool + per-row page tables)
+# ===========================================================================
+#
+# Host-side page accounting (allocator, radix prefix index, COW planning)
+# lives in serving/paging.py; this section is the pure device math: a
+# per-layer K/V pool of (num_pages, page_size, Hkv, hd), rows addressing
+# it through (B, P) page tables, RoPE positions CANONICAL (token i of a
+# row at position i) so one page's KV is bit-reusable by every row whose
+# prompt shares that chunk.  Page 0 is the null page: dead/overflow rows
+# write there and live attention never reads it unmasked.
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None):
+    """Zero-initialised shared page pool: per layer, K and V tensors of
+    (num_pages, page_size, Hkv, hd).  Covers pure-attention decoders with
+    a float KV dtype only (``InferenceEngine.can_page`` gates)."""
+    dtype = dtype or cfg.activation_dtype
+    if cfg.kv_cache_dtype == "int8":
+        raise ValueError("paged cache does not support int8 KV")
+    if cfg.scan_layers or cfg.is_encdec:
+        raise ValueError("paged cache requires a plain decoder")
+    hd = cfg.resolved_head_dim
+    layers = []
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) != "attn":
+            raise ValueError("paged cache requires pure-attention layers")
+        layers.append({
+            "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
+                           dtype),
+            "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
+                           dtype),
+        })
+    return layers
+
+
+def paged_prefill(params: Params, cfg: ModelConfig, tokens, positions,
+                  page_table, dst_page, dst_slot, layers):
+    """Prefill each row's NOVEL suffix into the shared page pool.
+
+    tokens/positions/dst_page/dst_slot: (B, S) left-padded suffixes — pads
+    carry position 0 and scatter into the null page.  page_table: (B, P)
+    covering each row's prompt pages; prefix pages already hold committed
+    (or COW-copied) KV.  Per layer the suffix K/V are scattered into the
+    pool FIRST, then attention gathers prefix+suffix through the page
+    table under one position-causal mask — so shared prefixes are read,
+    never recomputed.  Returns (last-position logits (B, V), new layers).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        x, lc = _paged_prefill_layer(lp, layers[i], x, cfg, positions,
+                                     page_table, dst_page, dst_slot)
+        new_layers.append(lc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_head(params, x[:, -1]), new_layers
+
+
+def _paged_prefill_layer(lp: Params, lc: Cache, x, cfg: ModelConfig,
+                         positions, page_table, dst_page, dst_slot):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    q, k, v = qkv_project(lp["attn"], h, cfg.num_heads, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kp = lc["k"].at[dst_page, dst_slot].set(k.astype(lc["k"].dtype))
+    vp = lc["v"].at[dst_page, dst_slot].set(v.astype(lc["v"].dtype))
+    if _pallas_attention_ok(cfg):
+        attn_out = pallas_kernels.paged_prefill(q, kp, vp, page_table,
+                                                positions)
+    else:
+        attn_out = kernels_ref.paged_prefill_ref(q, kp, vp, page_table,
+                                                 positions)
+    x = x + attn_out.reshape(b, s, cfg.num_heads * hd) @ lp["attn"]["wo"]
+    if cfg.d_ff:
+        x = x + _ffn(lp, cfg, x)
+    return x, {"k": kp, "v": vp}
+
+
+def _paged_decode_step(params: Params, cfg: ModelConfig, token, cache):
+    """One decode step against a paged cache.
+
+    cache: {"layers": [{"k","v"} per layer over the pool], "page_table":
+    (B, P) int32, "row_len": (B,) int32}.  The next token of row b sits at
+    canonical position row_len[b] and its K/V land at page
+    page_table[b, row_len // page_size], slot row_len % page_size; the
+    page column is clamped to the table width so overflow (and harvested
+    rows, whose table is zeroed) write the null page harmlessly."""
+    b = token.shape[0]
+    pt = cache["page_table"]
+    rl = cache["row_len"]
+    ps = cache["layers"][0]["k"].shape[1]
+    positions = rl[:, None]
+    page_col = jnp.minimum(rl // ps, pt.shape[1] - 1)
+    dst_page = pt[jnp.arange(b), page_col]
+    dst_slot = rl % ps
+    x = jnp.take(params["embed"], token, axis=0)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        x, lc = _paged_decode_layer(lp, cache["layers"][i], x, cfg,
+                                    positions, pt, rl, dst_page, dst_slot)
+        new_layers.append(lc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, x)
+    return logits, {"layers": new_layers, "page_table": pt,
+                    "row_len": rl + 1}
+
+
+def _paged_decode_layer(lp: Params, lc: Cache, x, cfg: ModelConfig,
+                        positions, page_table, row_len, dst_page, dst_slot):
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    q, k, v = qkv_project(lp["attn"], h, cfg.num_heads, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kp = lc["k"].at[dst_page, dst_slot].set(k[:, 0].astype(lc["k"].dtype))
+    vp = lc["v"].at[dst_page, dst_slot].set(v[:, 0].astype(lc["v"].dtype))
+    valid = row_len + 1
+    if _pallas_attention_ok(cfg):
+        attn_out = pallas_kernels.paged_gqa_decode(q, kp, vp, page_table,
+                                                   valid)
+    else:
+        attn_out = kernels_ref.paged_gqa_decode_ref(q[:, 0], kp, vp,
+                                                    page_table,
+                                                    valid)[:, None]
+    x = x + attn_out.reshape(b, 1, cfg.num_heads * hd) @ lp["attn"]["wo"]
+    if cfg.d_ff:
+        x = x + _ffn(lp, cfg, x)
+    return x, {"k": kp, "v": vp}
 
 
 # ===========================================================================

@@ -248,6 +248,9 @@ def cache_specs(mesh: Mesh, cfg: ModelConfig, cache_shape) -> Any:
     da_size = _axis_size(mesh, da)
     q_tp, kv_tp = _tp_flags(mesh, cfg, decode=True)
 
+    if isinstance(cache_shape, dict) and "page_table" in cache_shape:
+        return _paged_cache_specs(mesh, cache_shape, da, da_size, kv_tp)
+
     def rule(path, leaf):
         keys = _path_keys(path)
         name = keys[-1]
@@ -303,6 +306,33 @@ def cache_specs(mesh: Mesh, cfg: ModelConfig, cache_shape) -> Any:
         if name in ("c", "n", "h", "m"):  # slstm (B, H, hd): DP only
             return done(P(b_axis, None, None))
         return done(P(*([b_axis] + [None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def _paged_cache_specs(mesh: Mesh, cache_shape, da, da_size, kv_tp) -> Any:
+    """Specs for a paged KV cache (page pool + per-row page table).
+
+    The pool's leading axis is *pages*, not rows, so it shards over the
+    data axes whenever num_pages divides (each shard owns a page slice;
+    decode's page-table gather turns into GSPMD collective-gather traffic
+    only for cross-shard pages).  KV heads shard over "model" exactly as
+    in the dense layout; a page's sequence axis (page_size) is never
+    sharded — pages are the transfer granule.  page_table / row_len are
+    per-row lane state and shard like every other row lane."""
+
+    def rule(path, leaf):
+        name = _path_keys(path)[-1]
+        shape = leaf.shape
+        if not shape:
+            return P()
+        if name in ("k", "v"):
+            # (num_pages, page_size, Hkv, hd)
+            p_axis = da if shape[0] % da_size == 0 else None
+            return P(p_axis, None, "model" if kv_tp else None, None)
+        # page_table (B, P) / row_len (B,): row-granule lane state
+        b_axis = da if shape[0] % da_size == 0 else None
+        return P(b_axis, *([None] * (len(shape) - 1)))
 
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 

@@ -1,10 +1,12 @@
 """Local serving substrate: engine (batched + continuously-batched
-generation), streaming job scheduler, samplers and byte tokenizer."""
+generation over dense or paged KV caches), page pool + radix prefix
+index, streaming job scheduler, samplers and byte tokenizer."""
 from .engine import EngineUsage, InferenceEngine
+from .paging import PagePool, RadixIndex
 from .scheduler import JobScheduler, ScheduledResult
 from .sampler import sample, sample_rows, split_rows
 from .tokenizer import ByteTokenizer, approx_tokens
 
-__all__ = ["InferenceEngine", "EngineUsage", "JobScheduler",
-           "ScheduledResult", "sample", "sample_rows", "split_rows",
-           "ByteTokenizer", "approx_tokens"]
+__all__ = ["InferenceEngine", "EngineUsage", "PagePool", "RadixIndex",
+           "JobScheduler", "ScheduledResult", "sample", "sample_rows",
+           "split_rows", "ByteTokenizer", "approx_tokens"]

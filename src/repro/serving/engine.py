@@ -53,12 +53,29 @@ GSPMD partitions them from the committed input shardings (computation
 follows data), and slot admission stays O(admissions) — primed KV is
 scattered into the live sharded cache on device, never gathered to host.
 
+Paged KV cache (``paged=True``): instead of dense per-row ``(B, L, Hkv,
+hd)`` buffers, K/V live in a fixed-size page pool ``(num_pages,
+page_size, Hkv, hd)`` per layer, shared by every row and every call.
+Each row addresses its tokens through an int32 page table (token ``i``
+lives in ``pool[page_table[i // ps], i % ps]``); page 0 is a reserved
+null page that dead rows and padding write into, never read unmasked.
+A radix/trie prefix index (:class:`repro.serving.paging.RadixIndex`)
+keys full pages by their token-id chunks, so admission matches the
+longest cached prefix, shares those pages by refcount, copy-on-writes
+the partially-filled divergence page, and prefills ONLY the novel
+suffix — the MinionS win, since every worker job in a round shares the
+same instruction prefix.  Unreferenced prefixes are LRU-evicted when
+the pool runs dry.  RoPE positions are canonical (token ``i`` at
+position ``i``), which is what makes one prefix's pages bit-reusable by
+every job that shares it; the paged path is token-identical to the
+dense oracle.  Dense buffers remain the default (``paged=False``).
+
 Equivalence-test matrix (tests/test_equivalence.py): every execution path
 the engine has grown — {reference, pallas} backend x {generate_batch,
 serve} x {packed, unpacked} prefill x {single-device, 8-device host mesh}
-— must produce token-identical greedy output for identical seeds; the
-differential harness pins all cells to the single-device reference
-unpacked oracle.
+x {dense, paged} cache — must produce token-identical greedy output for
+identical seeds; the differential harness pins all cells to the
+single-device reference unpacked oracle.
 """
 from __future__ import annotations
 
@@ -76,6 +93,7 @@ from repro.models.config import ModelConfig
 from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
                                      row_specs, to_shardings)
 
+from .paging import PagePool, RadixIndex, _lcp, cow_copy
 from .sampler import job_keys, sample_rows, sample_traced, split_rows
 from .tokenizer import ByteTokenizer
 
@@ -104,6 +122,21 @@ class EngineUsage:
     admitted_jobs: int = 0
     finished_jobs: int = 0
     serve_epochs: int = 0
+    # paged-KV counters (paged=True engines):
+    #   pages_allocated     fresh pages handed out by the pool
+    #   pages_reused        full pages attached to a row without a copy
+    #                       (radix hits + intra-wave sibling sharing)
+    #   prefix_hit_tokens   prompt tokens served from those shared pages
+    #   prefill_tokens_saved  prompt tokens NOT prefilled (shared pages +
+    #                       the COW-copied partial page) — the gap between
+    #                       submitted and computed prefill work
+    pages_allocated: int = 0
+    pages_reused: int = 0
+    prefix_hit_tokens: int = 0
+    prefill_tokens_saved: int = 0
+    # high-water KV-cache HBM footprint in bytes: the page pool for paged
+    # engines, the largest epoch cache for dense ones
+    cache_hbm_bytes: int = 0
     # ("admit" | "finish", job_index, decode_position, row) in event order —
     # the observable record that a queued job entered a freed row while its
     # siblings were still decoding.  Bounded: only the most recent
@@ -162,6 +195,40 @@ def _pack_plan(lens: Sequence[int], row_cap: int) -> List[List[int]]:
             rows.append([i])
             space.append(row_cap - lens[i])
     return rows
+
+
+@dataclasses.dataclass
+class _PagedPlan:
+    """One job's admission plan against the page pool.
+
+    ``pages`` is the row's full page run: ``reused_full`` shared pages
+    (radix hits and/or pages borrowed from an earlier plan in the same
+    wave), then the freshly allocated tail (whose first page is the COW
+    destination when ``cow`` is set).  ``matched`` prompt tokens are
+    already present (shared pages + COW fill) and only the remaining
+    suffix is prefilled.  ``level`` orders intra-wave prefills: a plan
+    borrowing pages written by a level-l sibling prefills at level l+1.
+    """
+    jid: int
+    tokens: Tuple[int, ...]
+    budget: int
+    matched: int
+    reused_full: int
+    cow: Optional[Tuple[int, int, int]]    # (src_page, dst_page, fill)
+    fresh: List[int]
+    pages: List[int]
+    level: int
+
+
+def _cow_layers(layers, src, dst, fill):
+    """Apply one batched COW copy to every layer's K and V pools."""
+    return [{name: cow_copy(lc[name], src, dst, fill)
+             for name in ("k", "v")} for lc in layers]
+
+
+def _cache_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
 
 
 def _fused_decode_loop(params, cfg: ModelConfig, first_logits, cache, key,
@@ -310,13 +377,43 @@ class InferenceEngine:
     per-row sampler lanes are committed to their shardings as they are
     created, and the jitted loops partition from there (computation
     follows data — admission scatters never gather the cache to host).
+
+    ``paged=True`` replaces dense per-row KV buffers with a shared page
+    pool + radix prefix index (``page_size`` tokens per page,
+    ``num_pages`` pages per layer; requires a pure-attention decoder
+    with a float KV dtype — ``can_page``).  Pool layout and admission
+    flow:
+
+      pool        per layer ``{"k","v"}: (num_pages, page_size, Hkv,
+                  hd)``; page 0 is the reserved null page (dead rows'
+                  speculative decode writes land there).  The pool — and
+                  the radix index over it — PERSISTS across calls, so a
+                  later call sharing a prompt prefix with an earlier one
+                  prefills only the suffix.
+      admission   jobs in a wave are lexicographically planned: each
+                  matches the radix for its longest cached prefix (or
+                  borrows full pages from the preceding job's plan when
+                  that is longer), refcounts the shared pages,
+                  copy-on-writes the partial divergence page, LRU-evicts
+                  unreferenced prefixes if the pool is short, then batch-
+                  prefills only the novel suffixes (one jitted prefill
+                  per dependency level).  Full prompt pages are inserted
+                  back into the radix for future reuse.
+      decode      gathers K/V through the row's page table; the write
+                  frontier page is never radix-indexed, so decode cannot
+                  corrupt a committed prefix.
+
+    Prefix-reuse observability lands in ``usage``: ``pages_allocated`` /
+    ``pages_reused`` / ``prefix_hit_tokens`` / ``prefill_tokens_saved``
+    and the cache HBM high-water ``cache_hbm_bytes``.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  tokenizer: Optional[ByteTokenizer] = None,
                  max_seq_len: int = 4096, decode_margin: int = 256,
                  truncate_long: bool = False, pack_jobs: bool = True,
-                 mesh: "Mesh | str | None" = None):
+                 mesh: "Mesh | str | None" = None, paged: bool = False,
+                 page_size: int = 64, num_pages: int = 512):
         self.cfg = cfg
         if mesh == "auto":
             from repro.launch.mesh import make_host_mesh
@@ -333,7 +430,21 @@ class InferenceEngine:
         self.decode_margin = decode_margin
         self.truncate_long = truncate_long
         self.pack_jobs = pack_jobs
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
         self.usage = EngineUsage()
+        if self.paged and not self.can_page:
+            raise ValueError(
+                "paged=True requires a pure-attention decoder with a float "
+                "KV dtype (no layer scan / enc-dec / MoE / sliding window / "
+                "int8 KV)")
+        # lazily built on first paged call: host-side allocator + prefix
+        # index, and the device-resident per-layer K/V page pools
+        self._pool: Optional[PagePool] = None
+        self._radix: Optional[RadixIndex] = None
+        self._kv_pool = None
+        self._pool_bytes = 0
 
         self._prefill = jax.jit(
             partial(T.prefill, cfg=cfg), static_argnames=("capacity",))
@@ -354,6 +465,10 @@ class InferenceEngine:
                 params, cfg, tok, finished, out, n, cache, keys, live,
                 limit, temperature, stop_ids, buf_len=buf_len),
             static_argnames=("buf_len",))
+        self._paged_prefill_fn = jax.jit(
+            lambda params, toks, pos, pta, dstp, dsts, layers:
+            T.paged_prefill(params, cfg, toks, pos, pta, dstp, dsts, layers))
+        self._cow_fn = jax.jit(_cow_layers)
 
     # ------------------------------------------------------------------
     @property
@@ -375,6 +490,14 @@ class InferenceEngine:
     @property
     def can_pack(self) -> bool:
         return self.pack_jobs and self.can_serve
+
+    @property
+    def can_page(self) -> bool:
+        """Whether the model supports the paged KV cache: the pool stores
+        dequantized slot-addressable K/V, so everything :attr:`can_serve`
+        needs plus a float KV dtype (int8 scales would have to be paged
+        alongside the data — not implemented)."""
+        return self.can_serve and self.cfg.kv_cache_dtype != "int8"
 
     # ------------------------------------------------------------------
     # mesh placement: commit arrays to their canonical shardings.  Each
@@ -402,15 +525,12 @@ class InferenceEngine:
             self.mesh, row_specs(self.mesh, tree)))
 
     # ------------------------------------------------------------------
-    def _bucket_clamped(self, n: int) -> int:
-        return _bucket_clamped(n, self.max_seq_len)
-
     def _bucket_checked(self, prompt_ids: Sequence[Sequence[int]]) -> int:
         max_len = max(len(p) for p in prompt_ids)
         if max_len > self.max_seq_len:
             raise ValueError(f"prompt length {max_len} exceeds engine "
                              f"max_seq_len {self.max_seq_len}")
-        return self._bucket_clamped(max_len)
+        return _bucket_clamped(max_len, self.max_seq_len)
 
     def _truncate(self, prompt_ids: Sequence[Sequence[int]]):
         if not self.truncate_long:
@@ -524,6 +644,219 @@ class InferenceEngine:
         return first_logits, cache
 
     # ------------------------------------------------------------------
+    # paged KV cache: pool lifecycle, wave planning, admission
+    # ------------------------------------------------------------------
+    def _ensure_pool(self):
+        """Build the page pool + radix index on first paged use.  The pool
+        is engine-lifetime state: committed prefix pages survive across
+        ``generate_batch``/``serve`` calls, so later calls sharing a
+        prompt prefix skip its prefill entirely."""
+        if self._kv_pool is not None:
+            return
+        self._pool = PagePool(self.num_pages, self.page_size)
+        self._radix = RadixIndex(self.page_size)
+        layers = T.init_paged_cache(self.cfg, self.num_pages, self.page_size)
+        if self.mesh is not None:
+            shell = {"layers": layers,
+                     "page_table": jnp.zeros((1, 1), jnp.int32),
+                     "row_len": jnp.zeros((1,), jnp.int32)}
+            layers = self._shard_cache(shell)["layers"]
+        self._kv_pool = layers
+        self._pool_bytes = _cache_bytes(layers)
+        self.usage.cache_hbm_bytes = max(self.usage.cache_hbm_bytes,
+                                         self._pool_bytes)
+
+    def _plan_paged_wave(self, jobs, *, strict: bool):
+        """Plan one admission wave: ``jobs`` is [(jid, token_tuple,
+        budget)].  Returns (plans, deferred jids).
+
+        Jobs are planned in lexicographic prompt order so adjacent jobs
+        share the longest prefixes.  Each job takes the better of two
+        candidates: (A) the radix index's longest committed prefix —
+        shared full pages plus an optional COW at a mid-page divergence —
+        or (B) full pages borrowed from the previous plan in this wave
+        (whose content a level-ordered prefill writes before this job's).
+        The remainder (suffix + decode budget + margin) is freshly
+        allocated, evicting LRU index-only prefixes if needed.  A job
+        that still cannot allocate is deferred (``strict=False`` — serve
+        retries after a harvest frees pages) or raises (``strict=True`` —
+        generate_batch must admit everything)."""
+        ps = self.page_size
+        pool, radix = self._pool, self._radix
+        order = sorted(jobs, key=lambda it: (it[1], it[0]))
+        plans: List[_PagedPlan] = []
+        deferred: List[int] = []
+        fill_level: Dict[int, int] = {}
+        prev: Optional[_PagedPlan] = None
+        for jid, toks, budget in order:
+            L = len(toks)
+            cap = L - 1       # the last prompt token is always prefilled:
+            #                   sampling needs its logits
+            mpages, mfills = radix.match(toks)
+            run: List[Tuple[int, int]] = []
+            acc = 0
+            for pg, fl in zip(mpages, mfills):
+                take = min(fl, cap - acc)
+                if take <= 0:
+                    break
+                run.append((pg, take))
+                acc += take
+                if take < fl:
+                    break
+            shared = [pg for pg, t in run if t == ps]
+            cowsrc = run[-1] if run and run[-1][1] < ps else None
+            borrow: List[int] = []
+            if prev is not None:
+                n_borrow = min(_lcp(toks, prev.tokens), cap) // ps
+                if n_borrow * ps > acc:
+                    # full-page borrowing beats the committed match (the
+                    # borrowed content covers the same tokens, physical
+                    # page identity is irrelevant to attention)
+                    borrow = prev.pages[len(shared):n_borrow]
+                    cowsrc = None
+            matched = ((len(shared) + len(borrow)) * ps
+                       + (cowsrc[1] if cowsrc else 0))
+            for pg in shared + borrow:
+                pool.retain(pg)
+            if cowsrc is not None:
+                pool.retain(cowsrc[0])   # pin the COW source until it runs
+            need = (-(-(L + budget + self.decode_margin) // ps)
+                    - len(shared) - len(borrow))
+            if need > pool.available:
+                radix.evict(pool, need)
+            try:
+                fresh = pool.alloc(need)
+            except RuntimeError:
+                for pg in shared + borrow:
+                    pool.release(pg)
+                if cowsrc is not None:
+                    pool.release(cowsrc[0])
+                if strict:
+                    raise RuntimeError(
+                        f"page pool exhausted: job {jid} needs {need} "
+                        f"pages, {pool.available} free (num_pages="
+                        f"{self.num_pages}, page_size={ps})")
+                deferred.append(jid)
+                continue
+            cow = (cowsrc[0], fresh[0], cowsrc[1]) if cowsrc else None
+            pages = shared + borrow + fresh
+            level = 1 + max((fill_level.get(pg, 0) for pg in borrow),
+                            default=0)
+            for k in range(matched // ps, L // ps):
+                fill_level[pages[k]] = level
+            plan = _PagedPlan(jid=jid, tokens=toks, budget=budget,
+                              matched=matched,
+                              reused_full=len(shared) + len(borrow),
+                              cow=cow, fresh=fresh, pages=pages,
+                              level=level)
+            plans.append(plan)
+            prev = plan
+        return plans, deferred
+
+    def _prefill_paged_level(self, members: List[_PagedPlan], layers):
+        """One batched suffix prefill: left-padded suffix tokens with
+        canonical positions, per-token destination (page, slot) pairs and
+        per-row page tables, through the jitted paged prefill."""
+        ps = self.page_size
+        m = len(members)
+        sfx = [len(p.tokens) - p.matched for p in members]
+        s_sfx = _bucket_clamped(max(sfx), self.max_seq_len, minimum=8)
+        p_att = _bucket(max(-(-len(p.tokens) // ps) for p in members),
+                        minimum=1)
+        toks = np.full((m, s_sfx), ByteTokenizer.PAD, np.int32)
+        poss = np.zeros((m, s_sfx), np.int32)
+        dstp = np.zeros((m, s_sfx), np.int32)
+        dsts = np.zeros((m, s_sfx), np.int32)
+        pta = np.zeros((m, p_att), np.int32)
+        for i, p in enumerate(members):
+            ln = sfx[i]
+            gpos = np.arange(p.matched, len(p.tokens))
+            row_pages = np.asarray(p.pages, np.int32)
+            toks[i, s_sfx - ln:] = p.tokens[p.matched:]
+            poss[i, s_sfx - ln:] = gpos
+            dstp[i, s_sfx - ln:] = row_pages[gpos // ps]
+            dsts[i, s_sfx - ln:] = gpos % ps
+            n_att = -(-len(p.tokens) // ps)
+            pta[i, :n_att] = row_pages[:n_att]
+        batch = self._shard_rows({
+            "t": jnp.asarray(toks), "p": jnp.asarray(poss),
+            "a": jnp.asarray(pta), "dp": jnp.asarray(dstp),
+            "ds": jnp.asarray(dsts)})
+        first_logits, layers = self._paged_prefill_fn(
+            self.params, batch["t"], batch["p"], batch["a"], batch["dp"],
+            batch["ds"], layers)
+        self.usage.prefill_slots += m * s_sfx
+        return first_logits, layers
+
+    def _admit_plans(self, plans: List[_PagedPlan], layers):
+        """Execute a planned wave: batched COW copies first (their sources
+        are committed pages, untouched by this wave's prefills), then one
+        batched suffix prefill per level (level l+1 reads pages level l
+        wrote), then index every plan's full prompt pages for future
+        reuse.  Returns (first_logits stacked in plan order, layers)."""
+        ps = self.page_size
+        cows = [p for p in plans if p.cow is not None]
+        if cows:
+            layers = self._cow_fn(
+                layers,
+                jnp.asarray([p.cow[0] for p in cows], jnp.int32),
+                jnp.asarray([p.cow[1] for p in cows], jnp.int32),
+                jnp.asarray([p.cow[2] for p in cows], jnp.int32))
+            for p in cows:
+                self._pool.release(p.cow[0])      # unpin the COW source
+        by_level: Dict[int, List[int]] = {}
+        for i, p in enumerate(plans):
+            by_level.setdefault(p.level, []).append(i)
+        rows = [None] * len(plans)
+        for lvl in sorted(by_level):
+            idxs = by_level[lvl]
+            fl, layers = self._prefill_paged_level(
+                [plans[i] for i in idxs], layers)
+            for pos_in_level, i in enumerate(idxs):
+                rows[i] = fl[pos_in_level]
+        for p in plans:
+            n_full = len(p.tokens) // ps
+            self._radix.insert(p.tokens[:n_full * ps], p.pages[:n_full],
+                               self._pool)
+            self.usage.pages_allocated += len(p.fresh)
+            self.usage.pages_reused += p.reused_full
+            self.usage.prefix_hit_tokens += p.reused_full * ps
+            self.usage.prefill_tokens_saved += p.matched
+        self.usage.cache_hbm_bytes = max(self.usage.cache_hbm_bytes,
+                                         self._pool_bytes)
+        return jnp.stack(rows), layers
+
+    def _release_pages(self, pages):
+        for pg in pages:
+            self._pool.release(pg)
+
+    def _paged_prime_batch(self, prompt_ids, max_new_tokens: int):
+        """Paged prefill for a whole generate_batch: plan + admit every
+        prompt in one wave, then assemble the (B-row) paged decode cache.
+        Returns (first_logits, cache, plans) in batch order."""
+        self._ensure_pool()
+        jobs = [(i, tuple(p), max_new_tokens)
+                for i, p in enumerate(prompt_ids)]
+        plans, _ = self._plan_paged_wave(jobs, strict=True)
+        first_logits, layers = self._admit_plans(plans, self._kv_pool)
+        # keep the post-prefill pool: committed prefix pages hold prompt
+        # KV; the decode loop's writes go to non-indexed tail pages of a
+        # functional copy that is discarded with the batch
+        self._kv_pool = layers
+        n = len(prompt_ids)
+        p_max = _bucket(max(len(p.pages) for p in plans), minimum=2)
+        pt = np.zeros((n, p_max), np.int32)
+        rl = np.zeros((n,), np.int32)
+        inv = np.zeros((n,), np.int64)
+        for row, p in enumerate(plans):
+            pt[p.jid, :len(p.pages)] = p.pages
+            rl[p.jid] = len(p.tokens)
+            inv[p.jid] = row
+        cache = {"layers": layers, "page_table": jnp.asarray(pt),
+                 "row_len": jnp.asarray(rl)}
+        return first_logits[jnp.asarray(inv)], cache, plans
+
+    # ------------------------------------------------------------------
     def generate_batch(self, prompts: Sequence[str], *,
                        max_new_tokens: int = 128, temperature: float = 0.0,
                        key=None, stop: str = "\n###") -> List[str]:
@@ -535,27 +868,35 @@ class InferenceEngine:
         lens = [len(p) for p in prompt_ids]
         s_job = self._bucket_checked(prompt_ids)
 
-        plan = None
-        if self.can_pack and len(prompts) > 1:
-            plan = _pack_plan(lens, s_job)
-            if len(plan) >= len(prompts):    # nothing to gain
-                plan = None
-
-        if plan is not None:
-            first_logits, cache = self._packed_prefill(
-                prompt_ids, plan, s_job, max_new_tokens)
+        plan = plans = None
+        if self.paged:
+            # paged prefill: match each prompt against the prefix index /
+            # its wave siblings and prefill only the novel suffixes (no
+            # packing — prefix sharing subsumes it)
+            first_logits, cache, plans = self._paged_prime_batch(
+                prompt_ids, max_new_tokens)
         else:
-            batch, s = self._prepare_batch(prompt_ids, s_job)
-            batch = self._shard_batch(batch)
-            capacity = _bucket(s + max_new_tokens + self.decode_margin)
-            logits, cache = self._prefill(self.params, batch=batch,
-                                          capacity=capacity)
-            first_logits = logits[:, -1]
-            self.usage.prefill_slots += int(batch["tokens"].size)
+            if self.can_pack and len(prompts) > 1:
+                plan = _pack_plan(lens, s_job)
+                if len(plan) >= len(prompts):    # nothing to gain
+                    plan = None
+            if plan is not None:
+                first_logits, cache = self._packed_prefill(
+                    prompt_ids, plan, s_job, max_new_tokens)
+            else:
+                batch, s = self._prepare_batch(prompt_ids, s_job)
+                batch = self._shard_batch(batch)
+                capacity = _bucket(s + max_new_tokens + self.decode_margin)
+                logits, cache = self._prefill(self.params, batch=batch,
+                                              capacity=capacity)
+                first_logits = logits[:, -1]
+                self.usage.prefill_slots += int(batch["tokens"].size)
         # commit the decode state to its canonical mesh layout (no-op on a
         # single-device engine): rows over "data", KV heads over "model"
         cache = self._shard_cache(cache)
         first_logits = self._shard_rows(first_logits)
+        self.usage.cache_hbm_bytes = max(self.usage.cache_hbm_bytes,
+                                         _cache_bytes(cache["layers"]))
 
         stop_ids = jnp.asarray(
             self.tokenizer.encode(stop, bos=False) if stop else [],
@@ -574,7 +915,12 @@ class InferenceEngine:
         n_decoded = int(n_dec)
         self.usage.host_transfers += 2
 
-        self.usage.add(sum(lens), n_decoded)
+        self.usage.add(sum(lens) if plans is None
+                       else sum(len(p.tokens) - p.matched for p in plans),
+                       n_decoded)
+        if plans is not None:
+            for p in plans:
+                self._release_pages(p.pages)
         texts = [self.tokenizer.decode(row) for row in out_np]
         if stop:
             texts = [t.split(stop)[0] for t in texts]
@@ -669,6 +1015,11 @@ class InferenceEngine:
             self.tokenizer.encode(stop, bos=False) if stop else [],
             jnp.int32)
 
+        if self.paged:
+            return self._serve_paged(prompt_ids, n, budgets, temps, key,
+                                     per_job_keys, stop, stop_ids, slots,
+                                     buf_len)
+
         results: List[Optional[str]] = [None] * n
         queue = list(range(n))
         row_job = [-1] * slots
@@ -690,7 +1041,7 @@ class InferenceEngine:
                 return [(list(rows), list(jids))]
             groups: Dict[int, Tuple[List[int], List[int]]] = {}
             for r, j in zip(rows, jids):
-                b = self._bucket_clamped(len(prompt_ids[j]))
+                b = _bucket_clamped(len(prompt_ids[j]), self.max_seq_len)
                 grp = groups.setdefault(b, ([], []))
                 grp[0].append(r)
                 grp[1].append(j)
@@ -754,6 +1105,8 @@ class InferenceEngine:
                 pos = s0
                 cache["pos"] = jnp.asarray(pos, jnp.int32)
                 cache = self._shard_cache(cache)
+                self.usage.cache_hbm_bytes = max(
+                    self.usage.cache_hbm_bytes, _cache_bytes(cache))
                 tok = jnp.zeros((slots,), jnp.int32)
                 finished = jnp.ones((slots,), bool)
                 live = jnp.zeros((slots,), bool)
@@ -774,7 +1127,8 @@ class InferenceEngine:
                 free = [r for r in range(slots) if row_job[r] == -1]
                 cap = cache["slot_mask"].shape[1]
                 fits = [j for j in by_length(queue)
-                        if self._bucket_clamped(len(prompt_ids[j])) <= pos
+                        if _bucket_clamped(len(prompt_ids[j]),
+                                           self.max_seq_len) <= pos
                         and pos + budgets[j] <= cap]
                 if free and fits:
                     pick = fits[:len(free)]
@@ -808,6 +1162,137 @@ class InferenceEngine:
             if done_rows:
                 live = live.at[jnp.asarray(done_rows, jnp.int32)].set(False)
 
+        self.usage.add(total_prefill, total_decode)
+        return [t if t is not None else "" for t in results]
+
+    # ------------------------------------------------------------------
+    def _serve_paged(self, prompt_ids, n, budgets, temps, key,
+                     per_job_keys, stop, stop_ids, slots, buf_len):
+        """Continuous batching over the page pool: no epochs, no shared
+        decode position.  Each row carries its own page table and length
+        (canonical positions), so admission is just planning pages for the
+        next queued jobs and prefilling their novel suffixes — a freed
+        row's pages return to the pool immediately and its page table is
+        zeroed (speculative decode writes land in the null page)."""
+        pad = ByteTokenizer.PAD
+        ps = self.page_size
+        self._ensure_pool()
+        self.usage.serve_epochs += 1
+        p_max = _bucket(
+            max(-(-(len(prompt_ids[j]) + budgets[j] + self.decode_margin)
+                  // ps) for j in range(n)), minimum=2)
+
+        results: List[Optional[str]] = [None] * n
+        queue = list(range(n))
+        row_job = [-1] * slots
+        row_pages: Dict[int, List[int]] = {}
+        cache = {"layers": self._kv_pool,
+                 "page_table": jnp.zeros((slots, p_max), jnp.int32),
+                 "row_len": jnp.zeros((slots,), jnp.int32)}
+        cache = self._shard_cache(cache)
+        tok = jnp.zeros((slots,), jnp.int32)
+        finished = jnp.ones((slots,), bool)
+        live = jnp.zeros((slots,), bool)
+        out = jnp.full((slots, buf_len), pad, jnp.int32)
+        n_emit = jnp.zeros((slots,), jnp.int32)
+        keys = jnp.zeros((slots, 2), jnp.uint32)
+        limit = jnp.zeros((slots,), jnp.int32)
+        temp = jnp.zeros((slots,), jnp.float32)
+        (tok, finished, live, out, n_emit, keys, limit,
+         temp) = self._shard_rows((tok, finished, live, out, n_emit, keys,
+                                   limit, temp))
+        total_prefill = total_decode = 0
+
+        while queue or any(j >= 0 for j in row_job):
+            free = [r for r in range(slots) if row_job[r] == -1]
+            if free and queue:
+                cand = queue[:len(free)]
+                plans, _ = self._plan_paged_wave(
+                    [(j, tuple(prompt_ids[j]), budgets[j]) for j in cand],
+                    strict=False)
+                if not plans and not any(j >= 0 for j in row_job):
+                    j = cand[0]
+                    raise RuntimeError(
+                        f"page pool cannot fit job {j} "
+                        f"({len(prompt_ids[j])} prompt + {budgets[j]} "
+                        f"budget tokens) even with the pool idle: raise "
+                        f"num_pages (={self.num_pages}) or lower "
+                        f"max_new_tokens")
+                if plans:
+                    first_logits, layers = self._admit_plans(
+                        plans, cache["layers"])
+                    cache["layers"] = layers
+                    rows = free[:len(plans)]
+                    jids = [p.jid for p in plans]
+                    pt_rows = np.zeros((len(plans), p_max), np.int32)
+                    rl_rows = np.zeros((len(plans),), np.int32)
+                    for i, p in enumerate(plans):
+                        pt_rows[i, :len(p.pages)] = p.pages
+                        rl_rows[i] = len(p.tokens)
+                    rows_arr = jnp.asarray(rows, jnp.int32)
+                    cache["page_table"] = cache["page_table"].at[
+                        rows_arr].set(jnp.asarray(pt_rows))
+                    cache["row_len"] = cache["row_len"].at[rows_arr].set(
+                        jnp.asarray(rl_rows))
+                    base = (per_job_keys[jnp.asarray(jids, jnp.int32)]
+                            if per_job_keys is not None
+                            else job_keys(key, jids))
+                    jkeys, sub = split_rows(base)
+                    jtemp = jnp.asarray([temps[j] for j in jids],
+                                        jnp.float32)
+                    tok = tok.at[rows_arr].set(
+                        sample_rows(first_logits, sub, jtemp))
+                    finished = finished.at[rows_arr].set(False)
+                    live = live.at[rows_arr].set(True)
+                    out = out.at[rows_arr].set(pad)
+                    n_emit = n_emit.at[rows_arr].set(0)
+                    keys = keys.at[rows_arr].set(jkeys)
+                    limit = limit.at[rows_arr].set(
+                        jnp.asarray([budgets[j] for j in jids], jnp.int32))
+                    temp = temp.at[rows_arr].set(jtemp)
+                    for r, p in zip(rows, plans):
+                        row_job[r] = p.jid
+                        row_pages[r] = p.pages
+                        queue.remove(p.jid)
+                        total_prefill += len(p.tokens) - p.matched
+                        self.usage.admitted_jobs += 1
+                        self.usage.record("admit", p.jid, len(p.tokens), r)
+
+            tok, finished, out, n_emit, cache, keys = self._serve_loop(
+                self.params, tok, finished, out, n_emit, cache, keys,
+                live, limit, temp, stop_ids, buf_len=buf_len)
+
+            # harvest — the only host<->device result transfers per yield
+            fin_np = np.asarray(finished)
+            n_np = np.asarray(n_emit)
+            out_np = np.asarray(out)
+            self.usage.host_transfers += 3
+            done_rows = [r for r in range(slots)
+                         if row_job[r] >= 0 and fin_np[r]]
+            for r in done_rows:
+                j = row_job[r]
+                text = self.tokenizer.decode(out_np[r, :int(n_np[r])])
+                results[j] = text.split(stop)[0] if stop else text
+                total_decode += int(n_np[r])
+                row_job[r] = -1
+                self._release_pages(row_pages.pop(r))
+                self.usage.finished_jobs += 1
+                self.usage.record("finish", j,
+                                  len(prompt_ids[j]) + int(n_np[r]), r)
+            if done_rows:
+                done_arr = jnp.asarray(done_rows, jnp.int32)
+                live = live.at[done_arr].set(False)
+                # quarantine dead rows: their pages may be reallocated
+                # while the loop keeps speculatively decoding them, so
+                # writes must drop into the null page and reads must not
+                # touch freed pages
+                cache["page_table"] = cache["page_table"].at[done_arr].set(0)
+                cache["row_len"] = cache["row_len"].at[done_arr].set(0)
+
+        # commit the decode-era pool: indexed prefix pages were never
+        # written after indexing (decode lands beyond each prompt's full
+        # pages), so the radix stays valid for future calls
+        self._kv_pool = cache["layers"]
         self.usage.add(total_prefill, total_decode)
         return [t if t is not None else "" for t in results]
 

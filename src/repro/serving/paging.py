@@ -1,0 +1,245 @@
+"""Paged KV-cache substrate: page pool, radix prefix index, COW copies.
+
+The MinionS traffic shape is maximally redundant — every worker job in a
+round shares the task-instruction prefix and document chunks repeat across
+rounds — so the engine's paged mode stores KV in fixed-size pages shared
+between rows instead of dense per-row buffers:
+
+  PagePool    host-side allocator over a device-resident pool of
+              ``num_pages`` pages of ``page_size`` token slots each.
+              Page 0 is the reserved NULL page: it is never allocated, and
+              dead/overflow writes are steered into it so a harvested row
+              can keep speculatively decoding without corrupting pages
+              that have been reallocated.  Pages are ref-counted: one ref
+              per row using the page plus one when the radix index holds
+              it; a page returns to the free list when its count drops to
+              zero.
+
+  RadixIndex  a page-granularity trie over token-id prefixes.  Each node
+              is one FULL page (a ``page_size``-token chunk); lookups walk
+              exact full-page matches and finish with the longest
+              token-level partial match against a child, which the engine
+              turns into a copy-on-write page (:func:`cow_copy`) at the
+              divergence point.  Inserting retains the indexed pages, so
+              a prefix outlives the row that produced it; LRU leaf-first
+              eviction releases index-only pages back to the pool when an
+              admission cannot allocate.
+
+  cow_copy    device-side partial-page copy: the first ``fill`` slots of a
+              source page land in a fresh private page (rest zeroed), so a
+              job diverging mid-page shares everything before the
+              divergence byte-exactly without mutating the shared page.
+
+All metadata here is plain host Python/numpy — the only device arrays are
+the pool's K/V tensors, owned by the engine.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Ref-counted allocator over page ids ``1..num_pages-1`` (0 = null).
+
+    Invariants (property-tested in tests/test_paging.py):
+      * a refcount never goes negative — double release raises;
+      * after every owner releases, the page is back on the free list
+        (no leaks): ``used == 0`` implies ``available == num_pages - 1``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is the null page): "
+                             f"{num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be positive: {page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._ref = np.zeros(self.num_pages, np.int64)
+        self._ref[NULL_PAGE] = 1          # permanently held, never freed
+        # pop() hands out ascending page ids (1, 2, ...): deterministic
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` pages at refcount 1; raises RuntimeError when the
+        free list is short (caller evicts/defers and retries)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise RuntimeError(f"page pool exhausted: need {n} pages, "
+                               f"{len(self._free)} free of "
+                               f"{self.num_pages - 1}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def retain(self, page: int) -> None:
+        if not (0 < page < self.num_pages) or self._ref[page] <= 0:
+            raise ValueError(f"retain of unowned page {page}")
+        self._ref[page] += 1
+
+    def release(self, page: int) -> None:
+        if not (0 < page < self.num_pages) or self._ref[page] <= 0:
+            raise ValueError(f"release of unowned page {page}")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+
+
+class _Node:
+    __slots__ = ("tokens", "page", "children", "parent", "last_use")
+
+    def __init__(self, tokens: Tuple[int, ...], page: int,
+                 parent: "Optional[_Node]"):
+        self.tokens = tokens
+        self.page = page
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class RadixIndex:
+    """Page-granularity radix trie over token-id prefixes.
+
+    Nodes hold FULL pages only — the engine indexes a prompt's
+    ``len(tokens) // page_size`` leading chunks after prefilling it.
+    :meth:`match` returns the longest indexed prefix as a page run whose
+    last entry may be a token-level partial match (the COW source).
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = int(page_size)
+        self.root = _Node((), NULL_PAGE, None)
+        self.n_nodes = 0
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return self.n_nodes
+
+    def match(self, tokens: Sequence[int]
+              ) -> Tuple[List[int], List[int]]:
+        """Longest indexed prefix of ``tokens`` as ``(pages, fills)``:
+        ``fills[i]`` tokens of ``pages[i]`` match, ``== page_size`` for
+        every entry except possibly the last (a mid-page divergence the
+        caller COWs).  Touches the matched path for LRU ordering."""
+        toks = tuple(tokens)
+        ps = self.page_size
+        self._tick += 1
+        pages: List[int] = []
+        fills: List[int] = []
+        node = self.root
+        i = 0
+        while i < len(toks):
+            chunk = toks[i:i + ps]
+            child = (node.children.get(chunk)
+                     if len(chunk) == ps else None)
+            if child is not None:
+                child.last_use = self._tick
+                pages.append(child.page)
+                fills.append(ps)
+                node = child
+                i += ps
+                continue
+            best, best_lcp = None, 0
+            for key, ch in node.children.items():
+                l = _lcp(key, chunk)
+                if l > best_lcp:
+                    best, best_lcp = ch, l
+            if best is not None:
+                best.last_use = self._tick
+                pages.append(best.page)
+                fills.append(best_lcp)
+            break
+        return pages, fills
+
+    def insert(self, tokens: Sequence[int], pages: Sequence[int],
+               pool: PagePool) -> int:
+        """Index the ``len(tokens) // page_size`` full-page chunks of
+        ``tokens`` as the page run ``pages``.  Newly created nodes retain
+        their page in ``pool`` (the index is an owner); chunks already
+        indexed keep their existing page.  Returns pages newly indexed."""
+        toks = tuple(tokens)
+        ps = self.page_size
+        n_full = len(toks) // ps
+        if n_full > len(pages):
+            raise ValueError(f"{n_full} full chunks but {len(pages)} pages")
+        self._tick += 1
+        node = self.root
+        new = 0
+        for j in range(n_full):
+            chunk = toks[j * ps:(j + 1) * ps]
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, int(pages[j]), node)
+                node.children[chunk] = child
+                pool.retain(child.page)
+                self.n_nodes += 1
+                new += 1
+            child.last_use = self._tick
+            node = child
+        return new
+
+    def evict(self, pool: PagePool, need: int) -> int:
+        """Release LRU leaves whose page is held ONLY by the index until
+        ``pool.available >= need`` (or nothing is evictable).  Leaf-first:
+        interior nodes become evictable as their subtrees drain.  Returns
+        the number of pages freed."""
+        freed = 0
+        while pool.available < need:
+            cand = None
+            stack = list(self.root.children.values())
+            while stack:
+                node = stack.pop()
+                if node.children:
+                    stack.extend(node.children.values())
+                elif pool.refcount(node.page) == 1 and (
+                        cand is None or node.last_use < cand.last_use):
+                    cand = node
+            if cand is None:
+                break
+            del cand.parent.children[cand.tokens]
+            pool.release(cand.page)
+            self.n_nodes -= 1
+            freed += 1
+        return freed
+
+
+def cow_copy(pool: jnp.ndarray, src, dst, fill) -> jnp.ndarray:
+    """Copy-on-write: for each i, copy the first ``fill[i]`` slots of page
+    ``src[i]`` into page ``dst[i]`` and zero the rest.  ``pool`` is
+    (num_pages, page_size, ...); ``src``/``dst``/``fill`` are (m,) int.
+    Source pages are untouched (COW preserves bytes — property-tested)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    fill = jnp.asarray(fill, jnp.int32)
+    ps = pool.shape[1]
+    keep = jnp.arange(ps)[None, :] < fill[:, None]          # (m, ps)
+    page = pool[src]                                        # (m, ps, ...)
+    mask = keep.reshape(keep.shape + (1,) * (page.ndim - 2))
+    new = jnp.where(mask, page, jnp.zeros((), page.dtype))
+    return pool.at[dst].set(new)

@@ -29,6 +29,12 @@ dict-order derivation leaked).  An ``InferenceEngine`` — or its bound
 path automatically, where the per-job lanes are honoured exactly
 (per-row sampling).
 
+Draining a paged engine (``engine.paged``) lexicographically clusters the
+expanded replicas by prompt before handing them to ``serve``, so jobs
+sharing an instruction prefix are admitted into the same wave and hit the
+engine's radix prefix index; results are still returned in submission
+order and PRNG lanes travel with their jobs.
+
 Mesh-sharded engines need no scheduler-side handling: ``serve`` itself
 widens the ``max_batch`` slot pool to whole decode rows per data shard
 (see :meth:`InferenceEngine.serve`), so the streaming path stays
@@ -184,12 +190,23 @@ class JobScheduler:
         if lanes is None:
             lanes = _replica_lanes(key, expanded)
         if self.engine is not None:
+            # Paged engines admit from the serve queue in submission order,
+            # so cluster prefix-sharing prompts ADJACENTLY here: jobs with
+            # a common instruction prefix land in the same admission wave,
+            # where the engine's planner shares their prefix pages.  Texts
+            # are un-permuted below; lanes travel with their jobs, so the
+            # reorder cannot perturb any replica's sample stream.
+            order = list(range(len(expanded)))
+            if getattr(self.engine, "paged", False):
+                order.sort(key=lambda ei: (expanded[ei][2].prompt, ei))
+            perm = [expanded[ei] for ei in order]
             try:
                 texts = self.engine.serve(
-                    [p.prompt for _, _, p in expanded],
-                    max_new_tokens=[p.max_new_tokens for _, _, p in expanded],
-                    temperature=[p.temperature for _, _, p in expanded],
-                    key=key, per_job_keys=lanes, slots=self.max_batch)
+                    [p.prompt for _, _, p in perm],
+                    max_new_tokens=[p.max_new_tokens for _, _, p in perm],
+                    temperature=[p.temperature for _, _, p in perm],
+                    key=key, per_job_keys=lanes[jnp.asarray(order)],
+                    slots=self.max_batch)
             except Exception as e:         # noqa: BLE001 — one SPMD program
                 # the pool is one program: a serve failure is every row's
                 # failure, reported per row instead of wedging the drain
@@ -197,7 +214,7 @@ class JobScheduler:
                            for ji, si, _ in expanded]
             else:
                 results = [ScheduledResult(ji, si, t)
-                           for (ji, si, _), t in zip(expanded, texts)]
+                           for (ji, si, _), t in zip(perm, texts)]
         else:
             results = self._drain_grouped(expanded, lanes)
         results.sort(key=lambda r: (r.job_index, r.sample_index))

@@ -3,7 +3,9 @@
 PRs 1-3 grew several numerically-equivalent execution paths through the
 serving engine: {reference, pallas-interpret} attention backends x
 {generate_batch, serve} x {packed, unpacked} prefill x {single-device,
-8-device host mesh}.  Rather than ad-hoc pairwise spot checks, every cell
+8-device host mesh} — and PR 7 added the {dense, paged} cache axis
+(page-pool KV with radix prefix reuse).  Rather than ad-hoc pairwise
+spot checks, every cell
 of that grid is pinned to ONE oracle — the single-device, reference
 backend, unpacked ``generate_batch`` output — so all cells are
 transitively token-identical for identical seeds.
@@ -61,6 +63,23 @@ def _engine(arch, backend, mesh_devices, pack):
     return _engines[key]
 
 
+def _paged_engine(arch, backend, mesh_devices=1):
+    """Paged engines are cached per (arch, backend, mesh) ONLY — repeated
+    grid cells reuse one engine, so its persistent radix index serves
+    later cells from cached prefix pages.  Token identity must survive
+    that reuse (a cached prefix must be bit-equal to a fresh prefill)."""
+    key = (arch, backend, mesh_devices, "paged")
+    if key not in _engines:
+        cfg, params = _cfg_params(arch)
+        if backend == "pallas":
+            cfg = cfg.replace(attention_backend="pallas")
+        mesh = make_host_mesh(1) if mesh_devices > 1 else None
+        _engines[key] = InferenceEngine(cfg, params, max_seq_len=1024,
+                                        mesh=mesh, paged=True,
+                                        page_size=16, num_pages=512)
+    return _engines[key]
+
+
 def _oracle(arch):
     """Single-device / reference backend / unpacked generate_batch."""
     if arch not in _oracles:
@@ -106,6 +125,53 @@ def test_smoke_pallas_packed_matches_oracle():
     arch = "llama3.2-1b"
     assert _run_cell(arch, "pallas", "generate_batch", True, 1) == \
         _oracle(arch)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cells: page pool + radix prefix reuse must be token-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("path", ["generate_batch", "serve"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_equivalence_paged_grid(arch, backend, path, mesh_devices=1):
+    """Every paged cell == the dense oracle.  The engine is shared across
+    cells, so later cells admit against a radix populated by earlier ones
+    — prefix reuse under strict token identity."""
+    eng = _paged_engine(arch, backend, mesh_devices)
+    if path == "serve":
+        out = eng.serve(PROMPTS, max_new_tokens=MAX_NEW, slots=8)
+    else:
+        out = eng.generate_batch(PROMPTS, max_new_tokens=MAX_NEW)
+    assert out == _oracle(arch)
+
+
+def test_smoke_paged_serve_matches_oracle():
+    """Smoke cell 3: paged serve (reference) == dense oracle, twice — the
+    second call must be identical while prefilling only novel suffixes."""
+    eng = _paged_engine("llama3.2-1b", "reference")
+    assert eng.serve(PROMPTS, max_new_tokens=MAX_NEW, slots=8) == \
+        _oracle("llama3.2-1b")
+    before = eng.usage.prefill_tokens
+    assert eng.serve(PROMPTS, max_new_tokens=MAX_NEW, slots=8) == \
+        _oracle("llama3.2-1b")
+    again = eng.usage.prefill_tokens - before
+    assert again < before, "radix reuse did not reduce prefill work"
+    assert eng.usage.prefix_hit_tokens > 0
+
+
+@pytest.mark.slow
+@needs_mesh
+def test_sharded_paged_serve_matches_oracle():
+    """8-device mesh: the page pool shards pages over "data" (page_table /
+    row_len shard like row lanes) and must stay token-identical."""
+    eng = _paged_engine("llama3.2-1b", "reference", 8)
+    assert eng.serve(PROMPTS, max_new_tokens=MAX_NEW, slots=8) == \
+        _oracle("llama3.2-1b")
+    assert eng.generate_batch(PROMPTS, max_new_tokens=MAX_NEW) == \
+        _oracle("llama3.2-1b")
 
 
 # ---------------------------------------------------------------------------
