@@ -9,7 +9,7 @@ export PYTHONPATH := src
 
 PYTEST ?= python -m pytest
 
-.PHONY: smoke full bench chaos
+.PHONY: smoke full bench chaos fleet
 
 # sub-minute loop: everything not marked slow (includes the equivalence
 # smoke subset — sharded serve, pallas packed, paged serve with radix
@@ -28,6 +28,13 @@ full:
 chaos:
 	$(PYTEST) -q -m chaos
 
+# fleet gateway battery: queue/routing property tests, LRU response
+# cache, backpressure, replica-kill chaos, plus the EnginePool
+# determinism cells against real engines
+fleet:
+	$(PYTEST) -q tests/test_fleet.py
+	$(PYTEST) -q tests/test_equivalence.py -k fleet
+
 # engine benchmark scenarios (fused decode, packing, continuous batching,
 # paged-vs-dense prefix reuse, sharded-vs-single-device serve); rewrites
 # BENCH_engine.json and experiments/bench_results.csv
@@ -38,3 +45,9 @@ bench:
 # shared engine pool (merges the "protocol" key into BENCH_engine.json)
 bench-protocol:
 	python -m benchmarks.run --only protocol
+
+# fleet scenario: 2-replica heterogeneous EnginePool (cheap dense +
+# costly paged, cost-aware routing) vs a single replica on the same
+# MinionS workload (merges the "fleet" key into BENCH_engine.json)
+bench-fleet:
+	python -m benchmarks.run --only fleet

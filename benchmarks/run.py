@@ -643,6 +643,111 @@ def protocol_bench(n_tasks: int):
 
 
 # ===========================================================================
+# Fleet tier: 2-replica heterogeneous EnginePool vs a single replica
+# ===========================================================================
+
+
+def fleet_scenario(n_tasks: int = 8, *, worker_max_tokens: int = 32,
+                   slots: int = 4, cost_weight: float = 0.001) -> Dict:
+    """The same concurrent MinionS workload through ONE ProtocolRunner
+    over (a) a single-replica pool and (b) a 2-replica heterogeneous
+    fleet — a cheap dense tier (cost 1.0) plus a costly paged tier
+    (cost 3.0) behind cost-aware routing.  Records wall clock, goodput,
+    decode tok/s, the routing split, cache counters and requeues; the
+    determinism check is that BOTH pools produce identical answers
+    (placement-independent PRNG lanes — routing moves jobs, not
+    tokens)."""
+    from repro.core import MinionSConfig, ProtocolRunner, TaskSpec
+    from repro.core.tasks import make_task
+    from repro.launch.serve import build_engine
+    from repro.serving import EnginePool, Replica
+
+    def make_pool(two: bool) -> EnginePool:
+        replicas = [Replica(
+            build_engine("llama3.2-1b", truncate_long=True),
+            name="cheap", cost_per_token=1.0, max_batch=slots)]
+        if two:
+            replicas.append(Replica(
+                build_engine("llama3.2-1b", truncate_long=True,
+                             paged=True, page_size=32),
+                name="costly", cost_per_token=3.0, max_batch=slots))
+        return EnginePool(replicas, route_by_cost=True,
+                          cost_weight=cost_weight)
+
+    pcfg = MinionSConfig(max_rounds=1, num_tasks_per_round=1,
+                         pages_per_chunk=1,
+                         worker_max_tokens=worker_max_tokens)
+    tasks = [make_task(900 + i, n_pages=2, kind="extract")
+             for i in range(n_tasks)]
+    specs = [TaskSpec("minions", t.context, t.query, pcfg, task_id=i)
+             for i, t in enumerate(tasks)]
+
+    out: Dict[str, Dict] = {"n_tasks": n_tasks, "slots": slots,
+                            "cost_weight": cost_weight,
+                            "note": "per-replica drains are sequential "
+                                    "within a gateway drain and the paged "
+                                    "tier pays interpret-mode overhead on "
+                                    "CPU, so two-replica wall clock here "
+                                    "measures routing/goodput/identity, "
+                                    "not fleet speedup (see ROADMAP fleet "
+                                    "follow-ons)"}
+    answers = {}
+    for mode, two in (("one_replica", False), ("two_replica", True)):
+        pool = make_pool(two)
+        runner = ProtocolRunner(pool, ScriptedRemote(seed=0))
+        runner.run(specs)          # warm: compile every shape
+        for rep in pool.replicas:
+            rep.served_jobs = rep.decode_tokens = 0
+        pool.usage.reset()
+        t0 = time.time()
+        results = runner.run(specs)
+        dt = time.time() - t0
+        answers[mode] = [r.answer for r in results]
+        decoded = sum(rep.decode_tokens for rep in pool.replicas)
+        out[mode] = {
+            "wall_s": round(dt, 3),
+            "goodput": round(sum(r.status == "ok" for r in results)
+                             / n_tasks, 3),
+            "gateway_drains": pool.usage.drains,
+            "jobs_drained": pool.usage.jobs_drained,
+            "decode_tok_per_s": round(decoded / max(dt, 1e-9), 1),
+            "routing": {rep.name: rep.served_jobs
+                        for rep in pool.replicas},
+            "cache": {"hits": pool.usage.cache_hits,
+                      "misses": pool.usage.cache_misses,
+                      "bypass": pool.usage.cache_bypass},
+            "requeues": pool.usage.requeues,
+        }
+    out["answers_identical"] = \
+        answers["one_replica"] == answers["two_replica"]
+    return out
+
+
+def fleet_bench(n_tasks: int):
+    """Emit the 2-replica-vs-1-replica fleet scenario and merge it into
+    the BENCH_engine.json baseline (key "fleet")."""
+    res = fleet_scenario(min(n_tasks, 8))
+    for mode in ("one_replica", "two_replica"):
+        m = res[mode]
+        routing = "/".join(f"{k}:{v}" for k, v in m["routing"].items())
+        emit(f"fleet/minions_{mode}", m["wall_s"] * 1e6,
+             f"goodput={m['goodput']};tok_per_s={m['decode_tok_per_s']};"
+             f"drains={m['gateway_drains']};routing={routing};"
+             f"requeues={m['requeues']}")
+    emit("fleet/placement_identity", 0.0,
+         f"answers_identical={res['answers_identical']}")
+    path = "BENCH_engine.json"
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["fleet"] = res
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+# ===========================================================================
 # Roofline summary (reads the dry-run artifacts)
 # ===========================================================================
 
@@ -675,6 +780,7 @@ BENCHMARKS: Dict[str, Callable] = {
     "kernels": kernels,
     "engine": engine_bench,
     "protocol": protocol_bench,
+    "fleet": fleet_bench,
     "roofline": roofline_summary,
 }
 

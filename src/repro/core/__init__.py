@@ -7,8 +7,8 @@ wrappers."""
 from .baselines import (BaselineConfig, local_only_protocol,
                         remote_only_protocol, run_local_only,
                         run_remote_only)
-from .clients import (BreakerOpen, CallTimeout, EngineClient, FaultStats,
-                      ResilientClient, UsageMeter)
+from .clients import (BreakerOpen, CallTimeout, CircuitBreaker,
+                      EngineClient, FaultStats, ResilientClient, UsageMeter)
 from .cost import GPT4O_JAN2025, CostModel, PriceTable
 from .faults import FaultyClient, InjectedFault, LatencyModel
 from .minion import MinionConfig, minion_protocol, run_minion
@@ -30,7 +30,8 @@ __all__ = [
     "run_protocol", "minion_protocol", "minions_protocol",
     "remote_only_protocol", "local_only_protocol", "rag_protocol",
     # fault tolerance / chaos harness
-    "ResilientClient", "FaultStats", "CallTimeout", "BreakerOpen",
+    "ResilientClient", "FaultStats", "CircuitBreaker", "CallTimeout",
+    "BreakerOpen",
     "FaultyClient", "InjectedFault", "LatencyModel", "EngineClient",
     "UsageMeter",
 ]

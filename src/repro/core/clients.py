@@ -149,6 +149,56 @@ class FaultStats:
     consecutive_failures: int = 0
 
 
+class CircuitBreaker:
+    """The count-based closed → open → half-open breaker state machine,
+    factored out of :class:`ResilientClient` so the serving fleet can run
+    the SAME machine per replica (one breaker per engine replica in
+    :class:`~repro.serving.fleet.EnginePool`).
+
+    State lives in a :class:`FaultStats` (``state``,
+    ``consecutive_failures``, ``breaker_opens``) — pass an existing one
+    to surface breaker transitions alongside a client's other counters.
+    The breaker opens after ``threshold`` CONSECUTIVE failures; while
+    open, :meth:`admit` returns False (callers fast-fail) and counts the
+    cooldown in rejected admissions — deterministic, no wall clock.
+    After ``cooldown`` rejections the next admission runs half-open:
+    success closes the breaker, failure reopens it."""
+
+    def __init__(self, threshold: int = 4, cooldown: int = 8,
+                 stats: Optional[FaultStats] = None):
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.stats = stats if stats is not None else FaultStats()
+        self._cooldown_left = 0
+
+    @property
+    def state(self) -> str:
+        return self.stats.state
+
+    def admit(self) -> bool:
+        s = self.stats
+        if s.state == "open":
+            self._cooldown_left -= 1
+            if self._cooldown_left > 0:
+                return False
+            s.state = "half_open"          # next call is the probe
+        return True
+
+    def on_success(self) -> None:
+        self.stats.consecutive_failures = 0
+        self.stats.state = "closed"
+
+    def on_failure(self) -> None:
+        s = self.stats
+        s.consecutive_failures += 1
+        if s.state == "half_open" or (
+                s.state == "closed"
+                and s.consecutive_failures >= self.threshold):
+            s.state = "open"
+            s.breaker_opens += 1
+            self._cooldown_left = self.cooldown
+
+
 class ResilientClient:
     """Fault-tolerant wrapper around any ``LMClient``: per-call timeouts,
     bounded retries with exponential backoff + seeded jitter, and a
@@ -193,31 +243,18 @@ class ResilientClient:
         self.meter = UsageMeter()
         self.stats = FaultStats()
         self._rng = random.Random(seed)
-        self._cooldown_left = 0
+        self._breaker = CircuitBreaker(breaker_threshold, breaker_cooldown,
+                                       stats=self.stats)
 
-    # -- breaker state machine ------------------------------------------
+    # -- breaker state machine (shared :class:`CircuitBreaker`) ----------
     def _admit(self) -> bool:
-        s = self.stats
-        if s.state == "open":
-            self._cooldown_left -= 1
-            if self._cooldown_left > 0:
-                return False
-            s.state = "half_open"          # next call is the probe
-        return True
+        return self._breaker.admit()
 
     def _on_success(self) -> None:
-        self.stats.consecutive_failures = 0
-        self.stats.state = "closed"
+        self._breaker.on_success()
 
     def _on_failure(self) -> None:
-        s = self.stats
-        s.consecutive_failures += 1
-        if s.state == "half_open" or (
-                s.state == "closed"
-                and s.consecutive_failures >= self.breaker_threshold):
-            s.state = "open"
-            s.breaker_opens += 1
-            self._cooldown_left = self.breaker_cooldown
+        self._breaker.on_failure()
 
     # -- call path -------------------------------------------------------
     def _call_once(self, prompt: str, temperature: float,

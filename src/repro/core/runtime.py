@@ -334,6 +334,13 @@ class ProtocolRunner:
         if local is None:
             return None
         from repro.serving import InferenceEngine, JobScheduler
+        from repro.serving.fleet import EnginePool
+        if isinstance(local, EnginePool):
+            # the pool IS a fleet-aware scheduler facade: one runner
+            # spreads each merged LocalBatch drain across the replicas
+            # (identity-derived RNG lanes travel with the jobs, so
+            # placement cannot perturb any task's sampling)
+            return local
         sched = getattr(local, "scheduler", None)    # EngineClient
         if sched is not None:
             return sched

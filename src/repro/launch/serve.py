@@ -21,6 +21,19 @@ from all N requests — the full protocol tier on top of the LocalLM this
 launcher builds.  Without it, the launcher stays the bare LocalLM side
 and the protocol drivers in examples/ compose it with a remote client.
 
+Fleet serving: ``--replicas N`` puts N engine replicas behind one
+cost-routed :class:`repro.serving.EnginePool` gateway; each repeatable
+``--replica-config "cost=3.0,paged,slots=8"`` spec customises one
+replica (keys: ``cost`` per-token weight, ``paged``/``dense``,
+``page_size``, ``num_pages``, ``slots``, ``arch``, ``name``), so a
+cheap dense tier and a costly paged tier can serve one workload.
+``--route-by-cost`` (with ``--cost-weight``) enables the routing score's
+dollar term — the gateway keeps jobs on the cheap tier until its queue
+eta outweighs the cost gap; off, routing is pure least-loaded.  With
+``--minions`` the ProtocolRunner drives the whole fleet through the
+pool's JobScheduler facade; otherwise the raw prompts are served
+through the gateway.
+
 Fault tolerance (with ``--minions``): ``--chaos RATE`` injects a seeded
 fault schedule into the remote (:class:`repro.core.faults.FaultyClient` —
 errors, stalls, malformed completions), and ``--remote-timeout`` /
@@ -61,6 +74,51 @@ def build_engine(arch: str, *, smoke: bool = True, checkpoint=None,
                            page_size=page_size, num_pages=num_pages)
 
 
+def parse_replica_spec(spec: str) -> dict:
+    """``"cost=3.0,paged,slots=8"`` -> {"cost": "3.0", "paged": True,
+    "slots": "8"} — one ``--replica-config`` occurrence."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+        else:
+            out[part] = True
+    return out
+
+
+def build_fleet(args, mesh):
+    """Build the ``EnginePool`` for ``--replicas``/``--replica-config``:
+    one engine per replica (spec keys override the base engine flags),
+    wrapped with its cost weight behind the cost-routed gateway."""
+    from repro.serving import EnginePool, Replica
+    specs = [parse_replica_spec(s) for s in (args.replica_config or [])]
+    while len(specs) < args.replicas:
+        specs.append({})
+    replicas = []
+    for i, spec in enumerate(specs):
+        paged = args.paged
+        if spec.get("paged"):
+            paged = True
+        if spec.get("dense"):
+            paged = False
+        eng = build_engine(
+            spec.get("arch", args.arch), smoke=args.smoke,
+            checkpoint=args.checkpoint, mesh=mesh,
+            truncate_long=bool(args.minions), paged=paged,
+            page_size=int(spec.get("page_size", args.page_size)),
+            num_pages=int(spec.get("num_pages", args.num_pages)))
+        replicas.append(Replica(
+            eng, name=spec.get("name", f"r{i}"),
+            cost_per_token=float(spec.get("cost", 1.0)),
+            max_batch=int(spec.get("slots", args.slots))))
+    return EnginePool(replicas, route_by_cost=args.route_by_cost,
+                      cost_weight=args.cost_weight)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
@@ -86,6 +144,20 @@ def main():
                     help="tokens per KV page (with --paged)")
     ap.add_argument("--num-pages", type=int, default=512,
                     help="page-pool capacity in pages (with --paged)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="serve through an EnginePool of N replicas "
+                         "behind the cost-routed fleet gateway")
+    ap.add_argument("--replica-config", action="append", metavar="SPEC",
+                    help="per-replica spec, repeatable — e.g. "
+                         "'cost=3.0,paged,slots=8' (keys: cost, paged, "
+                         "dense, page_size, num_pages, slots, arch, name)")
+    ap.add_argument("--route-by-cost", action="store_true",
+                    help="enable the routing score's per-token dollar "
+                         "term: jobs stay on the cheap tier until its "
+                         "queue eta outweighs the cost gap")
+    ap.add_argument("--cost-weight", type=float, default=0.001,
+                    help="weight of the cost term vs queue eta seconds "
+                         "(with --route-by-cost)")
     ap.add_argument("--minions", type=int, default=0, metavar="N",
                     help="run N concurrent MinionS requests through a "
                          "ProtocolRunner over this engine (simulated "
@@ -111,11 +183,21 @@ def main():
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(args.model_parallel)
         print(f"mesh: {dict(mesh.shape)}")
-    engine = build_engine(args.arch, smoke=args.smoke,
-                          checkpoint=args.checkpoint, mesh=mesh,
-                          truncate_long=bool(args.minions),
-                          paged=args.paged, page_size=args.page_size,
-                          num_pages=args.num_pages)
+    pool = None
+    n_replicas = max(args.replicas, len(args.replica_config or []))
+    if n_replicas > 1:
+        pool = build_fleet(args, mesh)
+        engine = pool.replicas[0].engine
+        tiers = ", ".join(f"{r.name}(cost={r.cost_per_token:g})"
+                          for r in pool.replicas)
+        print(f"fleet: {len(pool.replicas)} replicas [{tiers}] "
+              f"cost_weight={pool.cost_weight:g}")
+    else:
+        engine = build_engine(args.arch, smoke=args.smoke,
+                              checkpoint=args.checkpoint, mesh=mesh,
+                              truncate_long=bool(args.minions),
+                              paged=args.paged, page_size=args.page_size,
+                              num_pages=args.num_pages)
     if args.minions:
         from repro.core import MinionSConfig, ProtocolRunner, TaskSpec
         from repro.core.clients import EngineClient, ResilientClient
@@ -139,8 +221,9 @@ def main():
             resilient = remote = ResilientClient(
                 remote, timeout_s=timeout, max_retries=args.retries,
                 seed=args.chaos_seed)
-        runner = ProtocolRunner(EngineClient(engine, max_batch=args.slots),
-                                remote)
+        local = pool if pool is not None else \
+            EngineClient(engine, max_batch=args.slots)
+        runner = ProtocolRunner(local, remote)
         cfg = MinionSConfig(max_rounds=1, num_tasks_per_round=1,
                             pages_per_chunk=1, worker_max_tokens=32)
         tasks = [make_task(700 + i, n_pages=2, kind="extract")
@@ -164,9 +247,17 @@ def main():
         if runner.faults_delivered:
             print(f"supervision: {runner.faults_delivered} faults "
                   f"delivered, {runner.degradations} degradations")
-        print(f"usage: {engine.usage}")
+        if pool is not None:
+            _print_fleet(pool)
+        else:
+            print(f"usage: {engine.usage}")
         return
-    if args.serve:
+    if pool is not None:
+        res = pool.run(args.prompts, temperature=args.temperature,
+                       max_new_tokens=args.max_new_tokens)
+        outs = [r.text if r.error is None else f"<error: {r.error}>"
+                for r in res]
+    elif args.serve:
         outs = engine.serve(args.prompts,
                             max_new_tokens=args.max_new_tokens,
                             temperature=args.temperature, slots=args.slots)
@@ -176,7 +267,21 @@ def main():
                                      temperature=args.temperature)
     for p, o in zip(args.prompts, outs):
         print(f">>> {p!r}\n{o!r}\n")
-    print(f"usage: {engine.usage}")
+    if pool is not None:
+        _print_fleet(pool)
+    else:
+        print(f"usage: {engine.usage}")
+
+
+def _print_fleet(pool) -> None:
+    u = pool.usage
+    print(f"fleet: {u.drains} drains / {u.jobs_drained} jobs | cache "
+          f"{u.cache_hits}h/{u.cache_misses}m/{u.cache_evictions}e | "
+          f"{u.requeues} requeues, {u.replica_failures} replica failures")
+    for r in pool.replicas:
+        print(f"  {r.name}: served={r.served_jobs} "
+              f"tokens={r.decode_tokens} cost={r.cost_per_token:g} "
+              f"breaker={r.stats.state}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,18 @@
 """Local serving substrate: engine (batched + continuously-batched
 generation over dense or paged KV caches), page pool + radix prefix
-index, streaming job scheduler, samplers and byte tokenizer."""
+index, streaming job scheduler, multi-replica fleet gateway, samplers
+and byte tokenizer."""
 from .engine import EngineUsage, InferenceEngine
+from .fleet import (EnginePool, FleetUsage, GatewayQueue, LRUCache,
+                    NoHealthyReplica, Replica, ReplicaSnapshot, route_job)
 from .paging import PagePool, RadixIndex
-from .scheduler import JobScheduler, ScheduledResult
+from .scheduler import JobScheduler, PoolSaturated, ScheduledResult
 from .sampler import sample, sample_rows, split_rows
 from .tokenizer import ByteTokenizer, approx_tokens
 
 __all__ = ["InferenceEngine", "EngineUsage", "PagePool", "RadixIndex",
-           "JobScheduler", "ScheduledResult", "sample", "sample_rows",
-           "split_rows", "ByteTokenizer", "approx_tokens"]
+           "JobScheduler", "PoolSaturated", "ScheduledResult",
+           "EnginePool", "Replica", "ReplicaSnapshot", "FleetUsage",
+           "GatewayQueue", "LRUCache", "NoHealthyReplica", "route_job",
+           "sample", "sample_rows", "split_rows", "ByteTokenizer",
+           "approx_tokens"]

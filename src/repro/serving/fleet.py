@@ -1,0 +1,645 @@
+"""Fleet serving: a cost-routed ``EnginePool`` gateway over N replicas.
+
+One engine = one mesh.  Production traffic wants many replicas — possibly
+heterogeneous configs (a small cheap "local tier" and a larger costly
+"remote tier"; dense and paged engines mixed) — behind one gateway.
+:class:`EnginePool` is that gateway, and it doubles as a fleet-aware
+:class:`~repro.serving.scheduler.JobScheduler` facade (same
+``submit``/``drain``/``run`` surface, same ``drains``/``jobs_drained``
+counters), so one :class:`~repro.core.runtime.ProtocolRunner` spreads its
+merged ``LocalBatch`` drains across the whole fleet without knowing it
+exists.
+
+The gateway pipeline, in dispatch order:
+
+* **Priority-queued admission** (:class:`GatewayQueue`).  ``submit``
+  takes a ``priority`` class (smaller dispatches first); dispatch is FIFO
+  within a class, and a bounded-bypass rule prevents starvation: a queued
+  job can be overtaken at most ``max_bypass`` times before it dispatches
+  regardless of class (the no-starvation invariant the property tests
+  pin).  A bounded queue (``max_queue``) REJECTS new submissions with
+  :class:`~repro.serving.scheduler.PoolSaturated` instead of growing
+  without limit — the same backpressure seam ``JobScheduler`` exposes.
+
+* **LRU response cache**, keyed on ``(prompt token ids, max_new_tokens,
+  temperature)`` and consulted only for deterministic requests
+  (``temperature <= 0``).  A hit costs ZERO engine calls; stochastic
+  requests are never cache-served and never cached.  Hit/miss/eviction
+  accounting lives in :class:`FleetUsage` (cumulative + ``reset()``,
+  ``EngineUsage``-style).
+
+* **Health-checked cost-aware routing** (:func:`route_job`): a PURE
+  function of the replica snapshots ``(healthy, queued decode tokens,
+  measured tok/s, per-token cost weight)`` — same state, same decision.
+  The cost term is the paper's local-vs-remote tradeoff enacted per job
+  at serving time: the gateway prefers the cheap tier until its queue
+  eta outweighs the cost gap.  Routing only ever changes WHERE a job
+  decodes, never WHAT it decodes: per-job PRNG lanes derive from stable
+  ``rng_id`` identities and travel with their jobs (``per_job_keys``),
+  so a homogeneous pool is token-identical to a single engine — the
+  equivalence cells assert exactly that.
+
+* **Per-replica circuit breakers** running the SAME
+  :class:`~repro.core.clients.CircuitBreaker` closed → open → half-open
+  state machine ``ResilientClient`` uses for remotes.  A failed replica
+  drain trips ``on_failure`` (default threshold 1 — a dead serve program
+  is not a flaky packet); its in-flight jobs are re-queued to healthy
+  replicas (identities travel along, so the rerouted rows decode the
+  same tokens), and later gateway drains tick the cooldown toward a
+  half-open probe — the router guarantees the recovering replica one
+  probe job even when siblings would win every routing decision.
+
+* **Streaming**: :meth:`EnginePool.stream` yields results as rows free —
+  cache hits first, then each replica drain's rows in the engine's
+  freed-row finish order (mapped from ``EngineUsage`` finish events
+  through ``JobScheduler.last_perm``).  :meth:`EnginePool.drain`
+  collects the same results in submission order — the scheduler-facade
+  contract the runner relies on.
+
+Per-replica drains reuse :class:`JobScheduler` unchanged, so paged
+replicas keep their prefix-clustered admission waves and every replica
+honours identity-derived sampling lanes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import (Any, Callable, List, Optional, Sequence, Tuple, Union)
+
+import jax
+
+from .engine import InferenceEngine
+from .scheduler import JobScheduler, PoolSaturated, ScheduledResult
+from .tokenizer import approx_tokens
+
+
+class NoHealthyReplica(RuntimeError):
+    """Every replica's breaker is open (or the fleet is empty): the job
+    cannot be placed.  Jobs that exhaust their requeue budget surface
+    this as their per-row ``ScheduledResult.error``."""
+
+
+# ---------------------------------------------------------------------------
+# priority admission queue
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _QueuedJob:
+    """One gateway submission awaiting dispatch."""
+    job_index: int                 # drain-local submission index
+    priority: int                  # smaller dispatches first
+    seq: int                       # global arrival order (FIFO tiebreak)
+    prompt: str
+    samples: int
+    temperature: float
+    max_new_tokens: int
+    rng_id: Tuple[int, ...]
+    bypassed: int = 0              # times a later pick overtook this job
+    requeues: int = 0              # failed-replica reroutes so far
+
+
+def _job_tokens(j: _QueuedJob) -> int:
+    """A job's routing weight: the decode tokens it may consume."""
+    return j.samples * j.max_new_tokens
+
+
+class GatewayQueue:
+    """Priority admission queue: FIFO within a class (smaller ``priority``
+    first), bounded bypass across classes.
+
+    Every :meth:`pop` that overtakes earlier arrivals increments their
+    ``bypassed`` counters; a job bypassed ``max_bypass`` times becomes
+    *overdue* and dispatches (oldest overdue first) before any fresh
+    higher-priority work.  Invariant (property-tested): no job is ever
+    overtaken more than ``max_bypass`` times, so sustained high-priority
+    arrivals cannot starve a low-priority job.
+
+    ``max_queue`` bounds admission: :meth:`push` on a full queue returns
+    ``False`` (the gateway surfaces that as a rejected submission)."""
+
+    def __init__(self, *, max_bypass: int = 8,
+                 max_queue: Optional[int] = None):
+        self.max_bypass = max_bypass
+        self.max_queue = max_queue
+        self._items: List[_QueuedJob] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def push(self, job: _QueuedJob) -> bool:
+        if self.max_queue is not None and len(self._items) >= self.max_queue:
+            return False
+        self._items.append(job)
+        return True
+
+    def pop(self) -> Optional[_QueuedJob]:
+        if not self._items:
+            return None
+        overdue = [j for j in self._items if j.bypassed >= self.max_bypass]
+        if overdue:
+            pick = min(overdue, key=lambda j: j.seq)
+        else:
+            pick = min(self._items, key=lambda j: (j.priority, j.seq))
+        for j in self._items:
+            if j.seq < pick.seq:
+                j.bypassed += 1
+        self._items.remove(pick)
+        return pick
+
+
+# ---------------------------------------------------------------------------
+# pure cost-aware routing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    """The routing view of one replica — everything :func:`route_job` may
+    consult, captured as a value so the decision is a pure function."""
+    index: int
+    healthy: bool            # breaker not open (half-open probes count)
+    depth_tokens: int        # decode tokens already assigned this drain
+    tok_per_s: float         # measured decode throughput (EWMA)
+    cost_per_token: float    # relative $ weight — the local/remote axis
+
+
+def route_job(snapshots: Sequence[ReplicaSnapshot], job_tokens: int, *,
+              cost_weight: float = 0.0) -> int:
+    """Pick the replica for a job expected to decode ``job_tokens``.
+
+    PURE: the decision depends only on the arguments — same snapshots,
+    same job, same weight, same replica (property-tested).  Score is
+    estimated finish time plus a weighted dollar term::
+
+        score(r) = (depth_tokens + job_tokens) / tok_per_s
+                 + cost_weight * cost_per_token * job_tokens
+
+    ``cost_weight=0`` is pure least-loaded (eta) routing; raising it
+    makes the gateway keep work on the cheap tier until that tier's
+    queue eta outweighs the cost gap — the paper's local/remote tradeoff
+    as a serving-time knob.  Unhealthy replicas are never chosen; ties
+    break to the lowest index.  Raises :class:`NoHealthyReplica` when no
+    replica is routable."""
+    best: Optional[Tuple[float, int]] = None
+    for s in snapshots:
+        if not s.healthy:
+            continue
+        eta = (s.depth_tokens + job_tokens) / max(s.tok_per_s, 1e-9)
+        score = eta + cost_weight * s.cost_per_token * job_tokens
+        if best is None or (score, s.index) < best:
+            best = (score, s.index)
+    if best is None:
+        raise NoHealthyReplica(
+            f"no healthy replica among {len(snapshots)}")
+    return best[1]
+
+
+# ---------------------------------------------------------------------------
+# response cache
+# ---------------------------------------------------------------------------
+
+
+class LRUCache:
+    """Capacity-bounded LRU over response texts: ``get`` refreshes
+    recency, ``put`` evicts the least-recently-used entry when full and
+    reports each eviction to ``on_evict``."""
+
+    def __init__(self, capacity: int,
+                 on_evict: Optional[Callable[[], None]] = None):
+        self.capacity = capacity
+        self.on_evict = on_evict
+        self._d: "OrderedDict[Any, str]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def keys(self) -> List[Any]:
+        """Keys from least to most recently used (eviction order)."""
+        return list(self._d)
+
+    def get(self, key) -> Optional[str]:
+        if key not in self._d:
+            return None
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key, value: str) -> None:
+        if self.capacity <= 0:
+            return
+        if key in self._d:
+            self._d.move_to_end(key)
+            self._d[key] = value
+            return
+        while len(self._d) >= self.capacity:
+            self._d.popitem(last=False)
+            if self.on_evict is not None:
+                self.on_evict()
+        self._d[key] = value
+
+
+# ---------------------------------------------------------------------------
+# gateway observability
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetUsage:
+    """Gateway counters, ``EngineUsage``-style: CUMULATIVE across drains,
+    zeroed only by :meth:`reset` (regression-tested).  ``events`` is a
+    bounded routing-decision log of ``(kind, job_index, replica)``
+    tuples, ``kind`` in {"route", "probe", "requeue", "hit", "reject"}
+    (replica is -1 when not applicable)."""
+    submitted: int = 0
+    rejected: int = 0          # admissions refused by the bounded queue
+    drains: int = 0            # gateway drains
+    jobs_drained: int = 0      # (job, sample) replicas served OK (+ hits)
+    cache_hits: int = 0
+    cache_misses: int = 0      # deterministic lookups that missed
+    cache_bypass: int = 0      # stochastic requests (never cache-served)
+    cache_evictions: int = 0
+    requeues: int = 0          # jobs rerouted off a failed replica
+    replica_failures: int = 0  # per-replica drains with any failed row
+    events: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
+    MAX_EVENTS = 4096
+
+    def record(self, kind: str, job: int, replica: int) -> None:
+        self.events.append((kind, job, replica))
+        if len(self.events) > self.MAX_EVENTS:
+            del self.events[:len(self.events) - self.MAX_EVENTS]
+
+    def reset(self) -> None:
+        fresh = FleetUsage()
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
+
+
+# ---------------------------------------------------------------------------
+# replica
+# ---------------------------------------------------------------------------
+
+
+class Replica:
+    """One fleet member: an engine (or plain generate callable) behind
+    its own :class:`JobScheduler` drain path, with a per-token cost
+    weight, a measured-throughput EWMA, and its own
+    :class:`~repro.core.clients.CircuitBreaker` over a ``FaultStats``.
+
+    ``fault`` is a chaos hook in the :class:`~repro.core.faults.
+    FaultyClient` mold: a callable of the replica's drain index that may
+    raise to kill that drain (seeded schedules make chaos runs
+    bit-identical)."""
+
+    def __init__(self, target: Union[InferenceEngine, Callable], *,
+                 name: Optional[str] = None, cost_per_token: float = 1.0,
+                 max_batch: int = 8, init_tok_per_s: float = 100.0,
+                 ewma: float = 0.5, breaker_threshold: int = 1,
+                 breaker_cooldown: int = 2,
+                 fault: Optional[Callable[[int], None]] = None):
+        from repro.core.clients import CircuitBreaker, FaultStats
+        self.scheduler = JobScheduler(target, max_batch=max_batch)
+        self.engine = self.scheduler.engine
+        self.name = name
+        self.cost_per_token = float(cost_per_token)
+        self.tok_per_s = float(init_tok_per_s)
+        self.ewma = ewma
+        self.stats = FaultStats()
+        self.breaker = CircuitBreaker(breaker_threshold, breaker_cooldown,
+                                      stats=self.stats)
+        self.fault = fault
+        self.drain_calls = 0
+        self.served_jobs = 0       # (job, sample) replicas served OK here
+        self.decode_tokens = 0     # approx tokens decoded here
+
+    def drain_jobs(self, jobs: List[_QueuedJob], *, key,
+                   clock) -> List[ScheduledResult]:
+        """Submit ``jobs`` to this replica's scheduler and drain once.
+        Results come back keyed to GATEWAY job indices, reordered to the
+        engine's freed-row finish order when observable.  The chaos
+        ``fault`` hook may raise (gateway requeues the whole batch);
+        engine failures surface as per-row result errors."""
+        self.drain_calls += 1
+        if self.fault is not None:
+            self.fault(self.drain_calls - 1)
+        for j in jobs:
+            self.scheduler.submit(j.prompt, samples=j.samples,
+                                  temperature=j.temperature,
+                                  max_new_tokens=j.max_new_tokens,
+                                  rng_id=j.rng_id)
+        ev0 = len(self.engine.usage.events) if self.engine is not None \
+            else None
+        t0 = clock()
+        res = self.scheduler.drain(key=key)
+        dt = max(clock() - t0, 1e-9)
+        res = self._finish_order(res, ev0)
+        out, toks = [], 0
+        for r in res:
+            out.append(ScheduledResult(jobs[r.job_index].job_index,
+                                       r.sample_index, r.text, r.error))
+            if r.error is None:
+                toks += approx_tokens(r.text)
+        ok = sum(r.error is None for r in res)
+        if ok:
+            self.served_jobs += ok
+            self.decode_tokens += toks
+            self.tok_per_s += self.ewma * (toks / dt - self.tok_per_s)
+        return out
+
+    def _finish_order(self, res, ev0):
+        """Map the engine's finish events (freed-row order) back through
+        ``last_perm`` to reorder this drain's results; falls back to
+        submission order when the target reports no events (plain
+        callables, failed drains, trimmed logs)."""
+        perm = self.scheduler.last_perm
+        if self.engine is None or ev0 is None or perm is None or \
+                any(r.error is not None for r in res):
+            return res
+        fin = [e[1] for e in self.engine.usage.events[ev0:]
+               if e[0] == "finish"]
+        if sorted(fin) != list(range(len(perm))) or len(perm) != len(res):
+            return res
+        by_id = {(r.job_index, r.sample_index): r for r in res}
+        return [by_id[perm[bi]] for bi in fin]
+
+
+# ---------------------------------------------------------------------------
+# the gateway
+# ---------------------------------------------------------------------------
+
+
+def _error_rows(j: _QueuedJob, err: Exception) -> List[ScheduledResult]:
+    return [ScheduledResult(j.job_index, si, "", err)
+            for si in range(j.samples)]
+
+
+class EnginePool:
+    """N replicas behind a priority/cost gateway — and a drop-in
+    :class:`JobScheduler` facade for :class:`~repro.core.runtime.
+    ProtocolRunner` (``submit``/``drain``/``run``; ``drains``/
+    ``jobs_drained``; submission-order results; identity-derived RNG
+    lanes travel with their jobs to whichever replica serves them).
+
+    ``replicas``: :class:`Replica` objects, or raw engines/callables
+    (wrapped with default weights).  ``route_by_cost`` enables the cost
+    term of :func:`route_job` with weight ``cost_weight``; off, routing
+    is pure least-loaded.  ``max_queue`` bounds gateway admission
+    (rejections raise :class:`~repro.serving.scheduler.PoolSaturated`);
+    ``max_bypass`` is the queue's anti-starvation bound; ``max_requeues``
+    caps failure reroutes per drain before a job errors out.  ``clock``
+    is injectable for deterministic throughput measurement in tests."""
+
+    def __init__(self, replicas: Sequence[Union[Replica, InferenceEngine,
+                                                Callable]], *,
+                 route_by_cost: bool = True, cost_weight: float = 1.0,
+                 cache_size: int = 128, max_queue: Optional[int] = None,
+                 max_bypass: int = 8, max_requeues: int = 3,
+                 seed: int = 0, clock=time.monotonic):
+        if not replicas:
+            raise ValueError("EnginePool needs at least one replica")
+        self.replicas = [r if isinstance(r, Replica) else Replica(r)
+                         for r in replicas]
+        for i, r in enumerate(self.replicas):
+            if r.name is None:
+                r.name = f"r{i}"
+        self.route_by_cost = route_by_cost
+        self.cost_weight = float(cost_weight) if route_by_cost else 0.0
+        self.queue = GatewayQueue(max_bypass=max_bypass,
+                                  max_queue=max_queue)
+        self.usage = FleetUsage()
+        self.cache = LRUCache(cache_size, on_evict=self._evicted)
+        self.max_requeues = max_requeues
+        self.seed = seed
+        self.clock = clock
+        self._tok = next((r.engine.tokenizer for r in self.replicas
+                          if r.engine is not None), None)
+        self._next_job = 0
+        self._next_seq = 0
+        self._lane_ids = set()
+
+    def _evicted(self) -> None:
+        self.usage.cache_evictions += 1
+
+    # scheduler-facade counters (live in usage; reset() zeroes them too)
+    @property
+    def drains(self) -> int:
+        return self.usage.drains
+
+    @property
+    def jobs_drained(self) -> int:
+        return self.usage.jobs_drained
+
+    # -- admission ------------------------------------------------------
+    def submit(self, prompt: str, *, samples: int = 1,
+               temperature: float = 0.2, max_new_tokens: int = 128,
+               rng_id: Optional[Union[int, Tuple[int, ...]]] = None,
+               priority: int = 0) -> int:
+        """Queue one job for the next gateway drain; returns its job
+        index.  Same contract as :meth:`JobScheduler.submit` (identity
+        rules included) plus a ``priority`` class.  Raises
+        :class:`PoolSaturated` when the bounded gateway queue is full."""
+        ji = self._next_job
+        if rng_id is None:
+            rng_id = (ji,)
+        elif isinstance(rng_id, int):
+            rng_id = (rng_id,)
+        rng_id = tuple(rng_id)
+        replicas = {(rng_id, si) for si in range(samples)}
+        clash = replicas & self._lane_ids
+        if clash:
+            raise ValueError(f"PRNG identity {min(clash)} already queued; "
+                             "pass distinct rng_ids")
+        job = _QueuedJob(ji, priority, self._next_seq, prompt, samples,
+                         temperature, max_new_tokens, rng_id)
+        if not self.queue.push(job):
+            self.usage.rejected += 1
+            self.usage.record("reject", ji, -1)
+            raise PoolSaturated(
+                f"gateway queue full ({self.queue.max_queue}); shed or "
+                "drain before submitting more")
+        self._next_job += 1
+        self._next_seq += 1
+        self._lane_ids |= replicas
+        self.usage.submitted += 1
+        return ji
+
+    def try_submit(self, prompt: str, **kw) -> Tuple[str, Optional[int]]:
+        """``("queued", job_index)`` or ``("rejected", None)`` — the
+        outcome-style twin of :meth:`submit` for load-shedding callers."""
+        try:
+            return "queued", self.submit(prompt, **kw)
+        except PoolSaturated:
+            return "rejected", None
+
+    # -- routing view ---------------------------------------------------
+    def snapshot(self, depth: Optional[List[int]] = None
+                 ) -> List[ReplicaSnapshot]:
+        """The pure-routing view of the fleet right now (health = breaker
+        not open; ``depth`` defaults to idle)."""
+        depth = depth or [0] * len(self.replicas)
+        return [ReplicaSnapshot(i, r.stats.state != "open", depth[i],
+                                r.tok_per_s, r.cost_per_token)
+                for i, r in enumerate(self.replicas)]
+
+    def _route(self, jobs: List[_QueuedJob]):
+        """Assign each job to a replica via :func:`route_job`, in
+        admission order, accumulating assigned depth so load spreads.
+        Returns (per-replica batches, unroutable (job, error) pairs)."""
+        assign: List[List[_QueuedJob]] = [[] for _ in self.replicas]
+        unroutable: List[Tuple[_QueuedJob, Exception]] = []
+        depth = [0] * len(self.replicas)
+        for j in jobs:
+            try:
+                ri = route_job(self.snapshot(depth), _job_tokens(j),
+                               cost_weight=self.cost_weight)
+            except NoHealthyReplica as e:
+                unroutable.append((j, e))
+                continue
+            assign[ri].append(j)
+            depth[ri] += _job_tokens(j)
+            self.usage.record("route", j.job_index, ri)
+        self._assign_probes(assign)
+        return assign, unroutable
+
+    def _assign_probes(self, assign: List[List[_QueuedJob]]) -> None:
+        """Half-open probe guarantee: a recovering replica that won no
+        jobs (a healthy sibling's measured tok/s can dominate routing
+        indefinitely) steals one job from the largest batch, so it gets
+        to prove itself and close — or re-open — its breaker.  Only
+        batches with 2+ jobs donate: a lone job is never diverted to a
+        suspect replica."""
+        for ri, rep in enumerate(self.replicas):
+            if rep.stats.state != "half_open" or assign[ri]:
+                continue
+            donor = max(range(len(assign)), key=lambda i: len(assign[i]))
+            if len(assign[donor]) < 2:
+                continue
+            j = assign[donor].pop()
+            assign[ri].append(j)
+            self.usage.record("probe", j.job_index, ri)
+
+    # -- serving --------------------------------------------------------
+    def stream(self, *, seed: Optional[int] = None, key=None):
+        """Serve everything queued, YIELDING results as rows free: cache
+        hits first, then each replica drain's rows in freed-row finish
+        order.  Exhausting the generator completes the gateway drain;
+        :meth:`drain` collects the same rows in submission order."""
+        if key is None:
+            key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        jobs: List[_QueuedJob] = []
+        while True:
+            j = self.queue.pop()
+            if j is None:
+                break
+            jobs.append(j)
+        self._next_job = 0
+        self._lane_ids = set()
+        if not jobs:
+            return
+        self.usage.drains += 1
+        pending: List[_QueuedJob] = []
+        for j in jobs:
+            hit = None
+            if j.temperature > 0:
+                self.usage.cache_bypass += 1
+            else:
+                hit = self.cache.get(self._cache_key(j))
+                if hit is None:
+                    self.usage.cache_misses += 1
+                else:
+                    self.usage.cache_hits += 1
+            if hit is None:
+                pending.append(j)
+                continue
+            self.usage.record("hit", j.job_index, -1)
+            self.usage.jobs_drained += j.samples
+            for si in range(j.samples):
+                yield ScheduledResult(j.job_index, si, hit)
+        # one breaker admission tick per gateway drain: open breakers
+        # count their cooldown down here and may go half-open (the next
+        # routed batch is their probe)
+        for r in self.replicas:
+            r.breaker.admit()
+        assign, dead = self._route(pending)
+        for j, e in dead:
+            yield from _error_rows(j, e)
+        rounds = 0
+        while any(assign):
+            if rounds > self.max_requeues:
+                for batch in assign:
+                    for j in batch:
+                        yield from _error_rows(j, NoHealthyReplica(
+                            f"gave up after {j.requeues} requeues"))
+                return
+            rounds += 1
+            failed: List[_QueuedJob] = []
+            for ri, rep in enumerate(self.replicas):
+                batch = assign[ri]
+                if not batch:
+                    continue
+                try:
+                    res = rep.drain_jobs(batch, key=key, clock=self.clock)
+                except Exception:  # noqa: BLE001 — replica killed mid-drain
+                    res, bad = [], list(batch)
+                else:
+                    bad_idx = {r.job_index for r in res
+                               if r.error is not None}
+                    bad = [j for j in batch if j.job_index in bad_idx]
+                if bad:
+                    # a replica drain with ANY failed row is a replica
+                    # failure: trip its breaker, requeue its casualties
+                    rep.breaker.on_failure()
+                    rep.stats.failures += 1
+                    self.usage.replica_failures += 1
+                    failed += bad
+                else:
+                    rep.breaker.on_success()
+                    rep.stats.successes += 1
+                ok = [r for r in res if r.error is None]
+                self.usage.jobs_drained += len(ok)
+                self._fill_cache(batch, ok)
+                yield from ok
+            if not failed:
+                return
+            for j in failed:
+                j.requeues += 1
+                self.usage.requeues += 1
+                self.usage.record("requeue", j.job_index, -1)
+            # reroute casualties over the CURRENT health picture (the
+            # failed replica's breaker is likely open now)
+            assign, dead = self._route(failed)
+            for j, e in dead:
+                yield from _error_rows(j, e)
+
+    def drain(self, *, seed: Optional[int] = None,
+              key=None) -> List[ScheduledResult]:
+        """Run every queued job to completion; results in submission
+        order (the :class:`JobScheduler` contract)."""
+        out = list(self.stream(seed=seed, key=key))
+        out.sort(key=lambda r: (r.job_index, r.sample_index))
+        return out
+
+    def run(self, prompts: Sequence[str], *, samples: int = 1,
+            temperature: float = 0.2, seed: Optional[int] = None,
+            max_new_tokens: int = 128) -> List[ScheduledResult]:
+        """Submit-all-then-drain convenience wrapper."""
+        for p in prompts:
+            self.submit(p, samples=samples, temperature=temperature,
+                        max_new_tokens=max_new_tokens)
+        return self.drain(seed=seed)
+
+    # -- cache helpers --------------------------------------------------
+    def _cache_key(self, j: _QueuedJob):
+        ids = tuple(self._tok.encode(j.prompt)) if self._tok is not None \
+            else j.prompt
+        return (ids, j.max_new_tokens, round(float(j.temperature), 6))
+
+    def _fill_cache(self, batch: List[_QueuedJob],
+                    ok: List[ScheduledResult]) -> None:
+        first = {}
+        for r in ok:
+            first.setdefault(r.job_index, r.text)
+        for j in batch:
+            if j.temperature <= 0 and j.job_index in first:
+                self.cache.put(self._cache_key(j), first[j.job_index])

@@ -51,6 +51,14 @@ import jax.numpy as jnp
 from .engine import InferenceEngine
 
 
+class PoolSaturated(RuntimeError):
+    """Backpressure signal: a bounded scheduler/gateway queue is full and
+    the submission was REJECTED (nothing was queued).  Callers either
+    shed the job or retry after a drain; without a bound the queue grows
+    without limit and the caller gets no signal at all — this is the
+    admission-control seam the fleet gateway plugs into."""
+
+
 @dataclasses.dataclass
 class ScheduledResult:
     """One (job, sample) replica's result.  ``error`` is set (and ``text``
@@ -107,15 +115,28 @@ def _replica_lanes(key, expanded):
 class JobScheduler:
     def __init__(self,
                  target: Union[InferenceEngine, Callable[..., List[str]]],
-                 *, max_batch: int = 16):
+                 *, max_batch: int = 16, max_queue: Optional[int] = None):
         """``target``: an InferenceEngine (streaming serve pool of
         ``max_batch`` slots) or a plain ``(prompts, temperature=..., key=...,
-        max_new_tokens=...) -> texts`` callable (legacy grouped batching)."""
+        max_new_tokens=...) -> texts`` callable (legacy grouped batching).
+
+        ``max_queue`` bounds the submission queue: once that many jobs
+        are queued for the next drain, further :meth:`submit` calls raise
+        :class:`PoolSaturated` (and :meth:`try_submit` reports
+        ``"rejected"``) instead of growing the backlog without any
+        backpressure signal.  ``None`` (default) keeps the historical
+        unbounded behaviour."""
         engine = target if isinstance(target, InferenceEngine) else \
             getattr(target, "__self__", None)
         self.engine = engine if isinstance(engine, InferenceEngine) else None
         self.generate_fn = None if self.engine is not None else target
         self.max_batch = max_batch
+        self.max_queue = max_queue
+        #: (job_index, sample_index) pairs of the last drain, in the order
+        #: they were handed to the engine/callable — the fleet gateway maps
+        #: EngineUsage finish events back through this to stream results in
+        #: freed-row order
+        self.last_perm: Optional[List[Tuple[int, int]]] = None
         self._queue: List[_Pending] = []
         self._next_job = 0
         self._lane_ids = set()    # (rng_id, sample) identities queued
@@ -142,6 +163,10 @@ class JobScheduler:
         Submitting a replica whose ``(rng_id, sample)`` identity is
         already queued raises ``ValueError`` (its samples would be
         perfectly correlated with the earlier job's)."""
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            raise PoolSaturated(
+                f"scheduler queue full ({len(self._queue)}/{self.max_queue} "
+                "jobs pending); drain before submitting more")
         ji = self._next_job
         if rng_id is None:
             rng_id = (ji,)
@@ -163,6 +188,18 @@ class JobScheduler:
         self._queue.append(_Pending(ji, prompt, samples, temperature,
                                     max_new_tokens, rng_id))
         return ji
+
+    def try_submit(self, prompt: str, **kw) -> Tuple[str, Optional[int]]:
+        """Outcome-style admission: ``("queued", job_index)`` on success,
+        ``("rejected", None)`` when the bounded queue is saturated —
+        callers that shed load instead of unwinding (the fleet gateway,
+        open-loop load generators) branch on the outcome rather than
+        catching :class:`PoolSaturated`.  Identity errors (duplicate
+        ``rng_id``) still raise: they are caller bugs, not load."""
+        try:
+            return "queued", self.submit(prompt, **kw)
+        except PoolSaturated:
+            return "rejected", None
 
     def drain(self, *, seed: int = 0, key=None,
               lanes=None) -> List[ScheduledResult]:
@@ -200,6 +237,7 @@ class JobScheduler:
             if getattr(self.engine, "paged", False):
                 order.sort(key=lambda ei: (expanded[ei][2].prompt, ei))
             perm = [expanded[ei] for ei in order]
+            self.last_perm = [(ji, si) for ji, si, _ in perm]
             try:
                 texts = self.engine.serve(
                     [p.prompt for _, _, p in perm],
@@ -241,6 +279,7 @@ class JobScheduler:
             classes.setdefault((p.temperature, p.max_new_tokens),
                                []).append((ei, item))
         results: List[ScheduledResult] = []
+        self.last_perm = None      # grouped path reports no finish order
         for (t, b), members in classes.items():
             members = sorted(members, key=lambda m: len(m[1][2].prompt))
             for off in range(0, len(members), self.max_batch):

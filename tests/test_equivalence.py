@@ -248,3 +248,84 @@ def test_sharded_serve_transfers_o_admissions():
     sharded.serve(prompts, max_new_tokens=[b * 4 for b in budgets],
                   slots=8)
     assert sharded.usage.host_transfers - t0 == sharded_transfers
+
+
+# ---------------------------------------------------------------------------
+# fleet cells: EnginePool routing changes PLACEMENT, never tokens
+# ---------------------------------------------------------------------------
+
+
+def _fleet_engine(tag):
+    """Distinct engine INSTANCES over the same smoke weights — a real
+    2-replica pool, cached per tag so each replica compiles once."""
+    key = ("fleet", tag)
+    if key not in _engines:
+        cfg, params = _cfg_params("llama3.2-1b")
+        _engines[key] = InferenceEngine(cfg, params, max_seq_len=1024)
+    return _engines[key]
+
+
+def test_fleet_pool_greedy_matches_oracle():
+    """Smoke fleet cell: a 2-replica homogeneous pool serving the mixed
+    job set is token-identical to the single-engine oracle — and the
+    work is genuinely spread (both replicas serve)."""
+    from repro.serving import EnginePool, Replica
+    pool = EnginePool([Replica(_fleet_engine("a")),
+                       Replica(_fleet_engine("b"))],
+                      route_by_cost=False, clock=lambda: 0.0)
+    for p in PROMPTS:
+        pool.submit(p, temperature=0.0, max_new_tokens=MAX_NEW)
+    res = pool.drain(seed=0)
+    assert [r.error for r in res] == [None] * len(PROMPTS)
+    assert [r.text for r in res] == _oracle("llama3.2-1b")
+    assert all(rep.served_jobs > 0 for rep in pool.replicas)
+
+
+def test_fleet_pool_stochastic_matches_single_scheduler():
+    """Seeded-stochastic fleet cell: per-job PRNG lanes derive from the
+    drain key and the job's rng_id — not from placement — so a 2-replica
+    pool samples token-identically to one JobScheduler over one engine."""
+    from repro.serving import EnginePool, JobScheduler, Replica
+    sched = JobScheduler(_fleet_engine("a"))
+    pool = EnginePool([Replica(_fleet_engine("a")),
+                       Replica(_fleet_engine("b"))],
+                      route_by_cost=False, clock=lambda: 0.0)
+    for i, p in enumerate(PROMPTS):
+        sched.submit(p, temperature=0.9, max_new_tokens=MAX_NEW,
+                     rng_id=(i,))
+        pool.submit(p, temperature=0.9, max_new_tokens=MAX_NEW,
+                    rng_id=(i,))
+    want = [(r.job_index, r.sample_index, r.text)
+            for r in sched.drain(seed=11)]
+    got = [(r.job_index, r.sample_index, r.text)
+           for r in pool.drain(seed=11)]
+    assert got == want
+    assert all(rep.served_jobs > 0 for rep in pool.replicas)
+
+
+def test_fleet_heterogeneous_paged_dense_matches_oracle():
+    """Heterogeneous fleet cell: a paged replica (prefix-clustered
+    drains, radix reuse) and a dense replica in ONE pool.  Greedy output
+    equals the dense oracle; seeded-stochastic output equals a
+    single-scheduler run — cache layout is invisible to tokens."""
+    from repro.serving import EnginePool, JobScheduler, Replica
+    pool = EnginePool(
+        [Replica(_paged_engine("llama3.2-1b", "reference"),
+                 cost_per_token=3.0),
+         Replica(_fleet_engine("a"), cost_per_token=1.0)],
+        route_by_cost=False, clock=lambda: 0.0)
+    for p in PROMPTS:
+        pool.submit(p, temperature=0.0, max_new_tokens=MAX_NEW)
+    res = pool.drain(seed=0)
+    assert [r.text for r in res] == _oracle("llama3.2-1b")
+    assert all(rep.served_jobs > 0 for rep in pool.replicas)
+
+    sched = JobScheduler(_fleet_engine("a"))
+    for i, p in enumerate(PROMPTS):
+        sched.submit(p, temperature=0.9, max_new_tokens=MAX_NEW,
+                     rng_id=(i,))
+        pool.submit(p, temperature=0.9, max_new_tokens=MAX_NEW,
+                    rng_id=(i,))
+    want = [r.text for r in sched.drain(seed=23)]
+    got = [r.text for r in pool.drain(seed=23)]
+    assert got == want
