@@ -9,7 +9,7 @@ export PYTHONPATH := src
 
 PYTEST ?= python -m pytest
 
-.PHONY: smoke full bench chaos fleet
+.PHONY: smoke full bench chaos fleet lint
 
 # sub-minute loop: everything not marked slow (includes the equivalence
 # smoke subset — sharded serve, pallas packed, paged serve with radix
@@ -34,6 +34,14 @@ chaos:
 fleet:
 	$(PYTEST) -q tests/test_fleet.py
 	$(PYTEST) -q tests/test_equivalence.py -k fleet
+
+# static analysis: repro-lint determinism & trace-safety rules R1-R5
+# (exit 1 on any unbaselined finding; see lint_baseline.json), plus ruff
+# style lint when installed (CI installs it; local runs skip gracefully)
+lint:
+	python -m repro.analysis.lint src/repro
+	@if command -v ruff >/dev/null 2>&1; then ruff check src tests; \
+	else echo "ruff not installed; skipping style lint"; fi
 
 # engine benchmark scenarios (fused decode, packing, continuous batching,
 # paged-vs-dense prefix reuse, sharded-vs-single-device serve); rewrites

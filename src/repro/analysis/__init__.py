@@ -1,0 +1,2 @@
+"""Offline analysis: analytic cost models (flops), roofline estimates,
+and the repro-lint static-analysis pass (lint/)."""

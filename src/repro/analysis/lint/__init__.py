@@ -1,0 +1,17 @@
+"""repro-lint: repo-specific determinism & trace-safety static analysis.
+
+Run as ``python -m repro.analysis.lint [paths] [--baseline FILE]`` or
+``make lint``.  See :mod:`.engine` for mechanics and :mod:`.rules` /
+:mod:`.pallas` for what each rule (R1–R5) protects.
+"""
+from .engine import (BaselineEntry, Finding, LintReport, Module, Project,
+                     Rule, lint_paths, load_baseline)
+from .pallas import PallasKernelRule
+from .rules import (HostSyncRule, NondeterminismRule, RngLaneRule,
+                    SharedStateRule, core_rules)
+
+__all__ = [
+    "BaselineEntry", "Finding", "LintReport", "Module", "Project", "Rule",
+    "lint_paths", "load_baseline", "core_rules", "NondeterminismRule",
+    "HostSyncRule", "RngLaneRule", "PallasKernelRule", "SharedStateRule",
+]

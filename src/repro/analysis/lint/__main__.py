@@ -1,0 +1,73 @@
+"""CLI: ``python -m repro.analysis.lint [paths] [options]``.
+
+Exit status is 0 iff there are no unbaselined findings — wire it
+straight into CI.  ``--fix-hints`` appends each rule's remediation
+hint; ``--show-baselined`` lists accepted findings too.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import lint_paths, load_baseline
+from .rules import core_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro-lint: determinism & trace-safety rules R1-R5")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--baseline", default="lint_baseline.json",
+                    help="accepted-findings file (default: "
+                         "lint_baseline.json; missing file = empty)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--root", default=".",
+                    help="path findings are reported relative to")
+    ap.add_argument("--fix-hints", action="store_true",
+                    help="print each rule's remediation hint")
+    ap.add_argument("--show-baselined", action="store_true",
+                    help="also list findings matched by the baseline")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = core_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}  {r.name}")
+            print(f"    {r.hint}")
+        return 0
+
+    baseline = []
+    bl_path = Path(args.baseline)
+    if not args.no_baseline and bl_path.exists():
+        baseline = load_baseline(bl_path)
+
+    try:
+        report = lint_paths([Path(p) for p in args.paths], rules=rules,
+                            root=Path(args.root), baseline=baseline)
+    except FileNotFoundError as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    for f in report.findings:
+        print(f.format(fix_hints=args.fix_hints))
+    if args.show_baselined:
+        for f in report.baselined:
+            print(f"[baselined] {f.format()}")
+    for e in report.stale_baseline:
+        print(f"warning: stale baseline entry matches nothing: "
+              f"{e.rule} {e.file} [{e.scope}] {e.message!r}", file=sys.stderr)
+
+    print(f"repro-lint: {report.files} files, "
+          f"{len(report.findings)} findings "
+          f"({len(report.baselined)} baselined, "
+          f"{report.inline_disabled} inline-disabled)", file=sys.stderr)
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

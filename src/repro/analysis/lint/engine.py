@@ -1,0 +1,266 @@
+"""repro-lint rule engine: AST walking, findings, baselines, escapes.
+
+The serving stack's guarantees — bit-identical reruns, routing changes
+placement never tokens, O(admissions) host transfers, deterministic cost
+accounting — are pinned *dynamically* by the equivalence/chaos suites.
+This engine runs repo-specific static rules (:mod:`.rules`, R1–R5) over
+the source so a whole class of regressions is caught at review time,
+before any test runs.
+
+Mechanics:
+
+  Finding      one rule hit: rule id, file:line, enclosing scope
+               ("EnginePool.stream"), message, fix hint.  Its baseline
+               KEY is (rule, file, scope, message) — line-free, so a
+               baseline survives unrelated edits to the file.
+  Rule         subclass with ``id``/``name``/``hint`` and
+               ``check(module) -> [Finding]``.  Rules see a
+               :class:`Module` (path, AST annotated with parents +
+               dotted scopes, raw source lines) and, for cross-module
+               analyses, the whole :class:`Project`.
+  # repro-lint: disable=R1[,R2] | all
+               inline escape hatch: suppresses matching findings on its
+               own line, or — when the line holds only the comment — on
+               the line directly below.
+  baseline     ``lint_baseline.json``: accepted, *documented* findings
+               (each entry carries a mandatory ``justification``).
+               Baselined findings don't fail the run; entries matching
+               nothing are reported as stale.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # "R1"
+    file: str          # posix path relative to the lint root
+    line: int
+    col: int
+    scope: str         # dotted enclosing defs, "" at module level
+    message: str
+    hint: str = ""
+
+    @property
+    def key(self) -> Tuple[str, str, str, str]:
+        """Line-free identity used for baseline matching."""
+        return (self.rule, self.file, self.scope, self.message)
+
+    def format(self, *, fix_hints: bool = False) -> str:
+        where = f"{self.file}:{self.line}"
+        scope = f" [{self.scope}]" if self.scope else ""
+        out = f"{where}: {self.rule}{scope}: {self.message}"
+        if fix_hints and self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``name``/``hint`` and implement
+    :meth:`check`.  ``project`` is attached by the engine before any
+    ``check`` call, so cross-module rules can consult every parsed file.
+    """
+
+    id = "R?"
+    name = "unnamed"
+    hint = ""
+
+    project: "Project"
+
+    def check(self, module: "Module") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: "Module", node: ast.AST,
+                message: str, hint: Optional[str] = None) -> Finding:
+        return Finding(self.id, module.path, getattr(node, "lineno", 0),
+                       getattr(node, "col_offset", 0),
+                       getattr(node, "_scope", ""), message,
+                       self.hint if hint is None else hint)
+
+
+class Module:
+    """One parsed source file: AST annotated with ``_parent`` and
+    ``_scope`` (dotted enclosing class/function names) on every node,
+    plus import-alias maps for resolving ``np.asarray``-style calls."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._annotate()
+        self.aliases = self._import_aliases()
+
+    def _annotate(self) -> None:
+        def walk(node: ast.AST, parent: Optional[ast.AST], scope: str):
+            node._parent = parent                       # type: ignore
+            node._scope = scope                         # type: ignore
+            inner = scope
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                inner = f"{scope}.{node.name}" if scope else node.name
+            elif isinstance(node, ast.Lambda):
+                inner = f"{scope}.<lambda>" if scope else "<lambda>"
+            for child in ast.iter_child_nodes(node):
+                walk(child, node, inner)
+        walk(self.tree, None, "")
+
+    def _import_aliases(self) -> Dict[str, str]:
+        """local name -> dotted module (``np`` -> ``numpy``, ``pl`` ->
+        ``jax.experimental.pallas``, ``T`` -> ``repro.models.transformer``)."""
+        out: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted name of an expression through the import aliases:
+        ``np.random.choice`` -> ``numpy.random.choice``; None when the
+        root is not an imported name."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+    def disabled_rules(self, line: int) -> frozenset:
+        """Rule ids suppressed at ``line`` by inline directives."""
+        out = set()
+        for ln in (line, line - 1):
+            if not (1 <= ln <= len(self.lines)):
+                continue
+            text = self.lines[ln - 1]
+            m = _DISABLE_RE.search(text)
+            if not m:
+                continue
+            # a directive on its own line applies to the line below it;
+            # a trailing directive applies to its own line only
+            if ln != line and text.split("#")[0].strip():
+                continue
+            out |= {r.strip() for r in m.group(1).split(",")}
+        return frozenset(out)
+
+
+class Project:
+    """Every parsed module of one lint run, keyed by posix relpath."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.by_path = {m.path: m for m in self.modules}
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    rule: str
+    file: str
+    scope: str
+    message: str
+    justification: str
+
+    @property
+    def key(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.file, self.scope, self.message)
+
+
+def load_baseline(path: Path) -> List[BaselineEntry]:
+    data = json.loads(path.read_text())
+    out = []
+    for e in data.get("findings", []):
+        if not e.get("justification"):
+            raise ValueError(
+                f"baseline entry without justification: {e!r} — every "
+                "accepted finding must say WHY it is intentional")
+        out.append(BaselineEntry(e["rule"], e["file"], e.get("scope", ""),
+                                 e["message"], e["justification"]))
+    return out
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding]            # unbaselined — these fail the run
+    baselined: List[Finding]           # matched a baseline entry
+    inline_disabled: int               # suppressed by disable comments
+    stale_baseline: List[BaselineEntry]  # entries matching nothing
+    files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def collect_files(paths: Sequence[Path], root: Path) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            if not p.is_file():
+                raise FileNotFoundError(f"no such lint target: {p}")
+            out.append(p)
+        elif not p.exists():
+            raise FileNotFoundError(f"no such lint target: {p}")
+    return out
+
+
+def lint_paths(paths: Sequence[Path], *, rules: Sequence[Rule],
+               root: Optional[Path] = None,
+               baseline: Optional[Sequence[BaselineEntry]] = None
+               ) -> LintReport:
+    """Run ``rules`` over every ``.py`` under ``paths``.  ``root``
+    anchors the relative file names findings (and baselines) use."""
+    root = (root or Path.cwd()).resolve()
+    files = collect_files([Path(p) for p in paths], root)
+    modules: List[Module] = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        modules.append(Module(rel, f.read_text()))
+    project = Project(modules)
+
+    raw: List[Finding] = []
+    for rule in rules:
+        rule.project = project
+        for m in modules:
+            raw.extend(rule.check(m))
+    raw.sort(key=lambda f: (f.file, f.line, f.rule))
+
+    kept: List[Finding] = []
+    inline_disabled = 0
+    for f in raw:
+        dis = project.by_path[f.file].disabled_rules(f.line)
+        if f.rule in dis or "all" in dis:
+            inline_disabled += 1
+        else:
+            kept.append(f)
+
+    baseline = list(baseline or [])
+    by_key = {e.key: e for e in baseline}
+    matched = set()
+    findings, baselined = [], []
+    for f in kept:
+        if f.key in by_key:
+            matched.add(f.key)
+            baselined.append(f)
+        else:
+            findings.append(f)
+    stale = [e for e in baseline if e.key not in matched]
+    return LintReport(findings, baselined, inline_disabled, stale,
+                      files=len(files))

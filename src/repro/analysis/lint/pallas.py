@@ -1,0 +1,271 @@
+"""R4 — Pallas kernel static validator.
+
+Pallas misconfigurations (grid/index-map arity drift, kernel signature
+vs spec-count mismatch, block shapes that don't divide the padded dims)
+surface as opaque lowering errors — and only on a TPU.  This rule
+re-derives the structural contract of every ``pl.pallas_call`` from the
+AST alone, so kernels are validated on any machine, at review time:
+
+  C1  each BlockSpec index-map's arity == len(grid) + num_scalar_prefetch
+  C2  an index-map returning a tuple has one coordinate per block dim
+  C3  kernel positional params == num_scalar_prefetch + len(in_specs)
+      + n_outputs + len(scratch_shapes)
+  C4  constant block dims divide the matching constant out_shape dims
+  C5  scratch_shapes entries are constructor calls (pltpu.VMEM/SMEM)
+
+Checks degrade gracefully: anything symbolic (shapes from ``q.shape``,
+specs built by helpers) is skipped, never guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .engine import Finding, Module, Rule
+
+
+class _CallSite:
+    """Everything statically extractable from one ``pl.pallas_call``."""
+
+    def __init__(self) -> None:
+        self.grid_len: Optional[int] = None
+        self.prefetch: int = 0
+        self.in_specs: List[Optional[Tuple[Optional[ast.expr], Optional[ast.Lambda]]]] = []
+        self.out_specs: List[Optional[Tuple[Optional[ast.expr], Optional[ast.Lambda]]]] = []
+        self.n_outputs: Optional[int] = None
+        self.out_shape_dims: Optional[List[ast.expr]] = None
+        self.scratch: Optional[List[ast.expr]] = None
+        self.kernel_params: Optional[int] = None
+        self.kernel_name: str = "<kernel>"
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+class PallasKernelRule(Rule):
+    id = "R4"
+    name = "pallas-static-validator"
+    hint = ("re-derive the pallas_call contract: index maps take one arg "
+            "per grid axis (+ scalar prefetch), return one coordinate per "
+            "block dim; the kernel takes prefetch + inputs + outputs + "
+            "scratch refs in that order; block dims must divide the "
+            "padded array dims")
+
+    # ---- local-name resolution inside the enclosing function -------------
+
+    def _local_env(self, call: ast.Call) -> Dict[str, ast.expr]:
+        env: Dict[str, ast.expr] = {}
+        fn = call
+        while fn is not None and not isinstance(
+                fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+            fn = getattr(fn, "_parent", None)
+        if fn is None:
+            return env
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                env[node.targets[0].id] = node.value
+        return env
+
+    def _deref(self, expr: ast.expr, env: Dict[str, ast.expr],
+               depth: int = 4) -> ast.expr:
+        while depth > 0 and isinstance(expr, ast.Name) and expr.id in env:
+            expr, depth = env[expr.id], depth - 1
+        return expr
+
+    # ---- extractors -------------------------------------------------------
+
+    def _is_call_to(self, module: Module, expr: ast.AST, leaf: str) -> bool:
+        if not isinstance(expr, ast.Call):
+            return False
+        dotted = module.resolve(expr.func)
+        return bool(dotted) and dotted.split(".")[-1] == leaf
+
+    def _block_spec(self, module: Module, expr: ast.expr,
+                    env: Dict[str, ast.expr]
+                    ) -> Optional[Tuple[Optional[ast.expr], Optional[ast.Lambda]]]:
+        """-> (block-shape tuple expr | None, index-map lambda | None);
+        None for specs we can't statically resolve (helper-built)."""
+        expr = self._deref(expr, env)
+        if not self._is_call_to(module, expr, "BlockSpec"):
+            return None
+        block: Optional[ast.expr] = None
+        imap: Optional[ast.Lambda] = None
+        args = list(expr.args)
+        for kw in expr.keywords:
+            if kw.arg == "block_shape":
+                block = kw.value
+            elif kw.arg == "index_map":
+                imap = kw.value if isinstance(kw.value, ast.Lambda) else imap
+        if args:
+            block = block or args[0]
+        if len(args) > 1 and isinstance(args[1], ast.Lambda):
+            imap = imap or args[1]
+        return (block, imap)
+
+    def _spec_list(self, module: Module, expr: Optional[ast.expr],
+                   env: Dict[str, ast.expr]
+                   ) -> List[Optional[Tuple[Optional[ast.expr], Optional[ast.Lambda]]]]:
+        if expr is None:
+            return []
+        expr = self._deref(expr, env)
+        items = expr.elts if isinstance(expr, (ast.List, ast.Tuple)) else [expr]
+        return [self._block_spec(module, e, env) for e in items]
+
+    def _kernel_params(self, module: Module, expr: ast.expr,
+                       env: Dict[str, ast.expr]) -> Tuple[Optional[int], str]:
+        """-> (positional-param count after partial binding, display name)."""
+        expr = self._deref(expr, env)
+        bound = 0
+        while self._is_call_to(module, expr, "partial") and expr.args:
+            bound += len(expr.args) - 1  # extra positional args pre-bind
+            expr = self._deref(expr.args[0], env)
+        name = None
+        if isinstance(expr, ast.Name):
+            name = expr.id
+            for node in ast.walk(module.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and node.name == name:
+                    n = len(node.args.posonlyargs) + len(node.args.args)
+                    return max(0, n - bound), name
+        return None, name or "<kernel>"
+
+    def _extract(self, module: Module, call: ast.Call) -> _CallSite:
+        site = _CallSite()
+        env = self._local_env(call)
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+
+        grid = kw.get("grid")
+        in_specs = kw.get("in_specs")
+        out_specs = kw.get("out_specs")
+
+        spec = kw.get("grid_spec")
+        if spec is not None:
+            spec = self._deref(spec, env)
+            if isinstance(spec, ast.Call):
+                skw = {k.arg: k.value for k in spec.keywords if k.arg}
+                grid = skw.get("grid", grid)
+                in_specs = skw.get("in_specs", in_specs)
+                out_specs = skw.get("out_specs", out_specs)
+                npf = skw.get("num_scalar_prefetch")
+                if npf is not None:
+                    site.prefetch = _const_int(self._deref(npf, env)) or 0
+
+        if grid is not None:
+            grid = self._deref(grid, env)
+            if isinstance(grid, ast.Tuple):
+                site.grid_len = len(grid.elts)
+
+        site.in_specs = self._spec_list(module, in_specs, env)
+        site.out_specs = self._spec_list(module, out_specs, env)
+
+        out_shape = kw.get("out_shape")
+        if out_shape is not None:
+            out_shape = self._deref(out_shape, env)
+            if isinstance(out_shape, (ast.List, ast.Tuple)):
+                site.n_outputs = len(out_shape.elts)
+                shapes = out_shape.elts
+            else:
+                site.n_outputs = 1
+                shapes = [out_shape]
+            if len(shapes) == 1 and self._is_call_to(
+                    module, shapes[0], "ShapeDtypeStruct"):
+                sd = shapes[0].args[0] if shapes[0].args else None
+                for skw in shapes[0].keywords:
+                    if skw.arg == "shape":
+                        sd = skw.value
+                sd = self._deref(sd, env) if sd is not None else None
+                if isinstance(sd, ast.Tuple):
+                    site.out_shape_dims = list(sd.elts)
+
+        scratch = kw.get("scratch_shapes")
+        if scratch is not None:
+            scratch = self._deref(scratch, env)
+            if isinstance(scratch, (ast.List, ast.Tuple)):
+                site.scratch = list(scratch.elts)
+
+        if call.args:
+            site.kernel_params, site.kernel_name = self._kernel_params(
+                module, call.args[0], env)
+        return site
+
+    # ---- checks -----------------------------------------------------------
+
+    def _check_site(self, module: Module, call: ast.Call,
+                    site: _CallSite) -> Iterable[Finding]:
+        out: List[Finding] = []
+        want_arity = (site.grid_len + site.prefetch
+                      if site.grid_len is not None else None)
+
+        for kind, specs in (("in", site.in_specs), ("out", site.out_specs)):
+            for i, spec in enumerate(specs):
+                if spec is None:
+                    continue
+                block, imap = spec
+                if imap is not None and want_arity is not None:
+                    arity = len(imap.args.posonlyargs) + len(imap.args.args)
+                    if arity != want_arity:
+                        out.append(self.finding(
+                            module, imap,
+                            f"{kind}_specs[{i}] index map takes {arity} "
+                            f"args but grid+prefetch needs {want_arity}"))
+                if imap is not None and isinstance(block, ast.Tuple) \
+                        and isinstance(imap.body, ast.Tuple) \
+                        and len(imap.body.elts) != len(block.elts):
+                    out.append(self.finding(
+                        module, imap,
+                        f"{kind}_specs[{i}] index map returns "
+                        f"{len(imap.body.elts)} coordinates for a "
+                        f"{len(block.elts)}-dim block"))
+
+        if site.kernel_params is not None and site.n_outputs is not None \
+                and site.scratch is not None:
+            want = (site.prefetch + len(site.in_specs) + site.n_outputs
+                    + len(site.scratch))
+            if site.kernel_params != want:
+                out.append(self.finding(
+                    module, call,
+                    f"kernel {site.kernel_name} takes {site.kernel_params} "
+                    f"refs but specs provide {want} (= {site.prefetch} "
+                    f"prefetch + {len(site.in_specs)} in + "
+                    f"{site.n_outputs} out + {len(site.scratch)} scratch)"))
+
+        if site.out_shape_dims is not None and len(site.out_specs) == 1 \
+                and site.out_specs[0] is not None:
+            block, _ = site.out_specs[0]
+            if isinstance(block, ast.Tuple) \
+                    and len(block.elts) == len(site.out_shape_dims):
+                for d, (b_e, s_e) in enumerate(
+                        zip(block.elts, site.out_shape_dims)):
+                    b, s = _const_int(b_e), _const_int(s_e)
+                    if b is not None and s is not None and b > 0 \
+                            and s % b != 0:
+                        out.append(self.finding(
+                            module, b_e,
+                            f"out block dim {d} is {b} which does not "
+                            f"divide the padded array dim {s}"))
+
+        if site.scratch is not None:
+            for i, entry in enumerate(site.scratch):
+                if not isinstance(entry, ast.Call):
+                    out.append(self.finding(
+                        module, entry,
+                        f"scratch_shapes[{i}] is not a pltpu.VMEM/SMEM "
+                        "constructor call"))
+        return out
+
+    def check(self, module: Module) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = module.resolve(node.func)
+            if not dotted or dotted.split(".")[-1] != "pallas_call":
+                continue
+            out.extend(self._check_site(module, node, self._extract(
+                module, node)))
+        return out

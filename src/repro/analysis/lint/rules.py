@@ -1,0 +1,499 @@
+"""repro-lint rules R1/R2/R3/R5 (R4 lives in :mod:`.pallas`).
+
+Each rule statically pins one invariant the dynamic suites enforce:
+
+  R1  no ambient nondeterminism (wall clocks, unseeded RNG, set-order
+      iteration) on routing/scheduling/prompt paths
+  R2  no host syncs (``.item()``, ``np.asarray``, coercions,
+      ``device_get``) inside jit-traced decode/prefill regions —
+      the O(admissions)-host-transfers invariant
+  R3  no ``jax.random.PRNGKey``/``split`` outside the sampler's
+      fold_in lane machinery — per-job keys derive from stable
+      ``rng_id`` so routing changes placement, never tokens
+  R5  no writes to ``Replica``/``EnginePool``/``GatewayQueue`` fields
+      from outside their own methods — fleet state has one writer
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .engine import Finding, Module, Rule
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return cur
+        cur = getattr(cur, "_parent", None)
+    return None
+
+
+def _enclosing_class_name(node: ast.AST) -> Optional[str]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur.name
+        cur = getattr(cur, "_parent", None)
+    return None
+
+
+def _attr_chain(node: ast.AST) -> Tuple[Optional[str], List[str]]:
+    """``rep.stats.failures`` -> ("rep", ["stats", "failures"])."""
+    attrs: List[str] = []
+    while isinstance(node, ast.Attribute):
+        attrs.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id, list(reversed(attrs))
+    return None, list(reversed(attrs))
+
+
+def _module_dotted(path: str) -> str:
+    parts = [p for p in path.split("/") if p]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    return ".".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# R1 — ambient nondeterminism
+
+
+_WALL_CLOCK = {
+    "time.time", "time.monotonic", "time.perf_counter", "time.time_ns",
+    "time.monotonic_ns", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow", "datetime.date.today",
+}
+_SAFE_NP_RANDOM = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                   "Philox", "RandomState"}
+_SAFE_PY_RANDOM = {"Random", "SystemRandom", "getstate", "setstate"}
+# consumers whose result does not depend on iteration order
+_ORDER_FREE = {"sorted", "sum", "min", "max", "len", "any", "all",
+               "set", "frozenset"}
+
+
+class NondeterminismRule(Rule):
+    id = "R1"
+    name = "nondeterminism-sources"
+    hint = ("inject a clock / seeded random.Random(seed) / "
+            "np.random.default_rng(seed), or sort before iterating a set; "
+            "deterministic reruns must not read ambient state")
+
+    # documented allowlist: the closed-form latency model, and the
+    # ResilientClient wall-clock fallback used only when no latency
+    # model is injected
+    ALLOW_FILES = ("core/latency.py",)
+    ALLOW_SCOPES = (("core/clients.py", "ResilientClient."),)
+
+    def _allowed(self, module: Module, scope: str) -> bool:
+        if module.path.endswith(self.ALLOW_FILES):
+            return True
+        for suffix, prefix in self.ALLOW_SCOPES:
+            if module.path.endswith(suffix) and scope.startswith(prefix):
+                return True
+        return False
+
+    def _order_free_context(self, node: ast.AST) -> bool:
+        cur = getattr(node, "_parent", None)
+        while cur is not None:
+            if isinstance(cur, ast.Call) and isinstance(cur.func, ast.Name) \
+                    and cur.func.id in _ORDER_FREE:
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+            cur = getattr(cur, "_parent", None)
+        return False
+
+    def _set_valued(self, expr: ast.AST) -> bool:
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return True
+        return (isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name)
+                and expr.func.id in ("set", "frozenset"))
+
+    def check(self, module: Module) -> Iterable[Finding]:
+        out: List[Finding] = []
+        # names assigned a set value, per scope
+        set_names: Set[Tuple[str, str]] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and self._set_valued(node.value):
+                set_names.add((node._scope, node.targets[0].id))
+
+        for node in ast.walk(module.tree):
+            scope = getattr(node, "_scope", "")
+            if self._allowed(module, scope):
+                continue
+
+            if isinstance(node, ast.Attribute):
+                dotted = module.resolve(node)
+                if dotted in _WALL_CLOCK:
+                    parent = getattr(node, "_parent", None)
+                    if isinstance(parent, ast.Call) and parent.func is node:
+                        out.append(self.finding(
+                            module, node, f"wall-clock call {dotted}()"))
+                    else:
+                        out.append(self.finding(
+                            module, node,
+                            f"ambient clock {dotted} passed as a value"))
+
+            elif isinstance(node, ast.Call):
+                dotted = module.resolve(node.func)
+                if dotted and dotted.startswith("random.") \
+                        and dotted.split(".", 1)[1] not in _SAFE_PY_RANDOM:
+                    out.append(self.finding(
+                        module, node,
+                        f"ambient module-level RNG {dotted}() "
+                        "(unseeded global state)"))
+                elif dotted and dotted.startswith("numpy.random.") \
+                        and dotted.split(".")[-1] not in _SAFE_NP_RANDOM:
+                    out.append(self.finding(
+                        module, node,
+                        f"ambient np.random RNG {dotted}() "
+                        "(unseeded global state)"))
+
+            iters: List[ast.AST] = []
+            if isinstance(node, ast.For):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            for it in iters:
+                direct = self._set_valued(it)
+                named = (isinstance(it, ast.Name)
+                         and (getattr(it, "_scope", ""), it.id) in set_names)
+                if (direct or named) and not self._order_free_context(node):
+                    out.append(self.finding(
+                        module, node,
+                        "iteration over a set (hash order is run-dependent "
+                        "under PYTHONHASHSEED)"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R2 — host syncs inside traced regions
+
+
+_TRACE_WRAPPERS = {  # call targets whose function-valued args become traced
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.scan",
+    "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map",
+    "jax.vmap", "jax.checkpoint", "jax.remat", "jax.grad",
+    "jax.value_and_grad",
+}
+_HOST_SYNC_CALLS = {
+    "numpy.asarray": "np.asarray on a traced value",
+    "numpy.array": "np.array on a traced value",
+    "jax.device_get": "jax.device_get inside a traced region",
+    "jax.block_until_ready": "block_until_ready inside a traced region",
+}
+
+
+class _FnKey:
+    """Identity of a function/lambda node within the project graph."""
+    __slots__ = ("module", "node")
+
+    def __init__(self, module: Module, node: ast.AST):
+        self.module, self.node = module, node
+
+    def __hash__(self):
+        return hash((self.module.path, id(self.node)))
+
+    def __eq__(self, other):
+        return (self.module.path, self.node) == (other.module.path, other.node)
+
+
+class HostSyncRule(Rule):
+    id = "R2"
+    name = "host-sync-in-traced-region"
+    hint = ("keep device values on device inside jitted code: use jnp ops "
+            "and lax control flow; harvest results once, outside the jit "
+            "boundary (the O(admissions) host-transfer budget)")
+
+    def _functions(self, module: Module) -> Dict[str, ast.AST]:
+        """Top-level (incl. methods) defs by simple name, last wins."""
+        out: Dict[str, ast.AST] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.setdefault(node.name, node)
+        return out
+
+    def _resolve_target(self, module: Module, expr: ast.AST,
+                        dotted_index: Dict[str, Module]) -> Optional[_FnKey]:
+        """A function-valued expression -> its def, across modules."""
+        if isinstance(expr, ast.Lambda):
+            return _FnKey(module, expr)
+        if isinstance(expr, ast.Call):  # partial(f, ...) / functools.partial
+            dotted = module.resolve(expr.func)
+            if dotted and dotted.split(".")[-1] == "partial" and expr.args:
+                return self._resolve_target(module, expr.args[0], dotted_index)
+            return None
+        dotted = module.resolve(expr)
+        if not dotted:
+            return None
+        # local def?
+        if "." not in dotted and dotted in self._functions(module):
+            return _FnKey(module, self._functions(module)[dotted])
+        # cross-module: longest project-module prefix
+        parts = dotted.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            mod = dotted_index.get(".".join(parts[:cut]))
+            if mod is not None and cut < len(parts):
+                fn = self._functions(mod).get(parts[cut])
+                if fn is not None:
+                    return _FnKey(mod, fn)
+        return None
+
+    def _build_traced(self) -> Set[_FnKey]:
+        project = self.project
+        if getattr(project, "_r2_traced", None) is not None:
+            return project._r2_traced  # type: ignore
+        dotted_index = {_module_dotted(m.path): m for m in project.modules}
+
+        seeds: Set[_FnKey] = set()
+        edges: Dict[_FnKey, Set[_FnKey]] = {}
+
+        def is_jit(expr: ast.AST, module: Module) -> bool:
+            dotted = module.resolve(expr)
+            if dotted in ("jax.jit", "jax.pjit", "jax.jit.jit"):
+                return True
+            if isinstance(expr, ast.Call):  # partial(jax.jit, ...)
+                d = module.resolve(expr.func)
+                if d and d.split(".")[-1] == "partial" and expr.args:
+                    return is_jit(expr.args[0], module)
+            return False
+
+        for module in project.modules:
+            fns = self._functions(module)
+            for node in ast.walk(module.tree):
+                # seed: @jax.jit / @partial(jax.jit, ...) decorators
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if is_jit(dec, module):
+                            seeds.add(_FnKey(module, node))
+                # seed: jax.jit(f) / jax.jit(partial(f, ...), ...)
+                if isinstance(node, ast.Call) and is_jit(node.func, module) \
+                        and node.args:
+                    tgt = self._resolve_target(module, node.args[0],
+                                               dotted_index)
+                    if tgt:
+                        seeds.add(tgt)
+                # edges out of the innermost enclosing function
+                if isinstance(node, ast.Call):
+                    owner = _enclosing_function(node)
+                    if owner is None:
+                        continue
+                    src = _FnKey(module, owner)
+                    tgts: List[Optional[_FnKey]] = []
+                    tgts.append(self._resolve_target(module, node.func,
+                                                     dotted_index))
+                    dotted = module.resolve(node.func)
+                    if dotted in _TRACE_WRAPPERS or (
+                            dotted and dotted.startswith("jax.lax.")):
+                        for arg in node.args:
+                            tgts.append(self._resolve_target(
+                                module, arg, dotted_index))
+                    for t in tgts:
+                        if t is not None:
+                            edges.setdefault(src, set()).add(t)
+                # containment: a def nested in a traced fn runs at trace time
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    owner = _enclosing_function(node)
+                    if owner is not None:
+                        edges.setdefault(_FnKey(module, owner), set()).add(
+                            _FnKey(module, node))
+
+        traced = set(seeds)
+        frontier = list(seeds)
+        while frontier:
+            cur = frontier.pop()
+            for nxt in edges.get(cur, ()):
+                if nxt not in traced:
+                    traced.add(nxt)
+                    frontier.append(nxt)
+        project._r2_traced = traced  # type: ignore
+        return traced
+
+    def _static_coercion(self, arg: ast.AST) -> bool:
+        """int()/float() of shapes, lens, constants is resolved at trace
+        time — only coercions of (potentially) traced values sync."""
+        names = []
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Attribute) and sub.attr in (
+                    "shape", "ndim", "size", "dtype", "itemsize"):
+                return True
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id == "len":
+                return True
+            if isinstance(sub, ast.Name):
+                names.append(sub.id)
+        # arithmetic over the static config (a hashable jit-static arg)
+        # or over literals resolves at trace time
+        if names and all(n in ("cfg", "config") for n in names):
+            return True
+        return isinstance(arg, (ast.Constant, ast.BinOp)) and all(
+            isinstance(s, (ast.BinOp, ast.Constant, ast.operator))
+            for s in ast.walk(arg))
+
+    def check(self, module: Module) -> Iterable[Finding]:
+        traced = self._build_traced()
+        if not any(k.module.path == module.path for k in traced):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            owner = _enclosing_function(node)
+            if owner is None or _FnKey(module, owner) not in traced:
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("item", "tolist") and not node.args:
+                out.append(self.finding(
+                    module, node,
+                    f".{node.func.attr}() forces a device->host sync "
+                    "inside a traced region"))
+                continue
+            dotted = module.resolve(node.func)
+            if dotted in _HOST_SYNC_CALLS:
+                out.append(self.finding(module, node,
+                                        _HOST_SYNC_CALLS[dotted]))
+                continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") \
+                    and len(node.args) == 1 \
+                    and not self._static_coercion(node.args[0]):
+                out.append(self.finding(
+                    module, node,
+                    f"{node.func.id}() coercion of a (possibly) traced "
+                    "value forces a host sync"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R3 — RNG-lane discipline
+
+
+_KEY_MINTERS = {"jax.random.PRNGKey", "jax.random.key", "jax.random.split"}
+
+
+class RngLaneRule(Rule):
+    id = "R3"
+    name = "rng-lane-discipline"
+    hint = ("derive keys with jax.random.fold_in chains over the job's "
+            "stable rng_id (scheduler.job_lane) or thread per_job_keys; "
+            "ad-hoc PRNGKey/split breaks placement-invariant sampling")
+
+    # the sampler owns the fold_in lane machinery
+    ALLOW_FILES = ("serving/sampler.py",)
+
+    def check(self, module: Module) -> Iterable[Finding]:
+        path = module.path
+        if not ("serving/" in path or "core/" in path):
+            return []
+        if path.endswith(self.ALLOW_FILES):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = module.resolve(node.func)
+            if dotted in _KEY_MINTERS:
+                short = dotted.rsplit(".", 1)[-1]
+                out.append(self.finding(
+                    module, node,
+                    f"jax.random.{short}() outside the sampler lane "
+                    "machinery"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R5 — fleet shared-state mutation
+
+
+_WATCHED_CLASSES = ("Replica", "EnginePool", "GatewayQueue")
+
+
+class SharedStateRule(Rule):
+    id = "R5"
+    name = "fleet-shared-state-mutation"
+    hint = ("route the write through a method of the owning class "
+            "(e.g. Replica.record_outcome) so fleet state has exactly "
+            "one writer and invariants hold under requeue/chaos")
+
+    def _field_owners(self) -> Dict[str, Set[str]]:
+        project = self.project
+        cached = getattr(project, "_r5_fields", None)
+        if cached is not None:
+            return cached
+        owners: Dict[str, Set[str]] = {}
+
+        def record(field: str, cls: str) -> None:
+            owners.setdefault(field, set()).add(cls)
+
+        for module in project.modules:
+            for node in ast.walk(module.tree):
+                if not (isinstance(node, ast.ClassDef)
+                        and node.name in _WATCHED_CLASSES):
+                    continue
+                for stmt in node.body:  # dataclass-style annotated fields
+                    if isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name):
+                        record(stmt.target.id, node.name)
+                    elif isinstance(stmt, ast.Assign):
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                record(t.id, node.name)
+                for sub in ast.walk(node):  # self.X = ... in methods
+                    if isinstance(sub, (ast.Assign, ast.AugAssign,
+                                        ast.AnnAssign)):
+                        targets = (sub.targets
+                                   if isinstance(sub, ast.Assign)
+                                   else [sub.target])
+                        for t in targets:
+                            if isinstance(t, ast.Attribute) \
+                                    and isinstance(t.value, ast.Name) \
+                                    and t.value.id == "self":
+                                record(t.attr, node.name)
+        project._r5_fields = owners  # type: ignore
+        return owners
+
+    def check(self, module: Module) -> Iterable[Finding]:
+        owners = self._field_owners()
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if not isinstance(t, ast.Attribute):
+                    continue
+                root, attrs = _attr_chain(t)
+                if root is None:
+                    continue
+                # for self.X writes only nested fields can trespass
+                # (self.X inside the owner's own method is the point)
+                candidates = attrs[1:] if root == "self" else attrs
+                here = _enclosing_class_name(t)
+                for attr in candidates:
+                    cls = owners.get(attr)
+                    if cls and here not in cls:
+                        out.append(self.finding(
+                            module, t,
+                            f"write to {'/'.join(sorted(cls))} field "
+                            f"'{attr}' from outside its methods"))
+                        break
+        return out
+
+
+def core_rules() -> List[Rule]:
+    from .pallas import PallasKernelRule
+    return [NondeterminismRule(), HostSyncRule(), RngLaneRule(),
+            PallasKernelRule(), SharedStateRule()]

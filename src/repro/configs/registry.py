@@ -7,7 +7,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import InputShape, ModelConfig, get_input_shape
+from repro.models.config import InputShape, ModelConfig
 
 from . import (granite_34b, granite_moe_1b_a400m, hymba_1_5b, llama3_2_1b,
                llama_3_2_vision_11b, olmoe_1b_7b, qwen1_5_32b, whisper_small,

@@ -8,7 +8,7 @@ hash/compare cleanly and can be embedded in jit static args.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

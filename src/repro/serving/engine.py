@@ -80,6 +80,7 @@ single-device reference unpacked oracle.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -96,6 +97,15 @@ from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
 from .paging import PagePool, RadixIndex, _lcp, cow_copy
 from .sampler import job_keys, sample_rows, sample_traced, split_rows
 from .tokenizer import ByteTokenizer
+
+
+def _sanitize() -> bool:
+    """Runtime sanitizer switch: ``REPRO_SANITIZE=1`` turns on the page-
+    pool refcount audit on every admission wave and the host-transfer
+    budget asserts in :meth:`InferenceEngine.serve`.  Read per call (not
+    cached) so tests can flip it with monkeypatch.setenv; off by
+    default, on in CI smoke."""
+    return bool(os.environ.get("REPRO_SANITIZE"))
 
 
 @dataclasses.dataclass
@@ -824,6 +834,8 @@ class InferenceEngine:
             self.usage.prefill_tokens_saved += p.matched
         self.usage.cache_hbm_bytes = max(self.usage.cache_hbm_bytes,
                                          self._pool_bytes)
+        if _sanitize():
+            self._pool.audit()
         return jnp.stack(rows), layers
 
     def _release_pages(self, pages):
@@ -1095,6 +1107,11 @@ class InferenceEngine:
                 self.usage.record("admit", j, pos, r)
             return sum(lens)
 
+        sanitize = _sanitize()
+        if sanitize:
+            xfer0 = self.usage.host_transfers
+            waves0 = self.usage.admitted_jobs + self.usage.finished_jobs
+
         while queue or any(j >= 0 for j in row_job):
             if cache is None:
                 self.usage.serve_epochs += 1
@@ -1163,6 +1180,17 @@ class InferenceEngine:
                 live = live.at[jnp.asarray(done_rows, jnp.int32)].set(False)
 
         self.usage.add(total_prefill, total_decode)
+        if sanitize:
+            # every 4-transfer harvest follows a wave that admitted or
+            # finished >= 1 job, so transfers stay O(admissions), never
+            # O(decoded tokens)
+            used = self.usage.host_transfers - xfer0
+            waves = (self.usage.admitted_jobs + self.usage.finished_jobs
+                     - waves0)
+            assert used <= 4 * waves + 4, (
+                f"host-transfer budget exceeded: {used} transfers for "
+                f"{waves} admit/finish events (budget 4*waves+4) — a "
+                "per-token sync leaked into the serve loop")
         return [t if t is not None else "" for t in results]
 
     # ------------------------------------------------------------------
@@ -1202,6 +1230,10 @@ class InferenceEngine:
          temp) = self._shard_rows((tok, finished, live, out, n_emit, keys,
                                    limit, temp))
         total_prefill = total_decode = 0
+        sanitize = _sanitize()
+        if sanitize:
+            xfer0 = self.usage.host_transfers
+            waves0 = self.usage.admitted_jobs + self.usage.finished_jobs
 
         while queue or any(j >= 0 for j in row_job):
             free = [r for r in range(slots) if row_job[r] == -1]
@@ -1294,6 +1326,15 @@ class InferenceEngine:
         # pages), so the radix stays valid for future calls
         self._kv_pool = cache["layers"]
         self.usage.add(total_prefill, total_decode)
+        if sanitize:
+            self._pool.audit()   # all rows released: catch page leaks
+            used = self.usage.host_transfers - xfer0
+            waves = (self.usage.admitted_jobs + self.usage.finished_jobs
+                     - waves0)
+            assert used <= 3 * waves + 3, (
+                f"host-transfer budget exceeded: {used} transfers for "
+                f"{waves} admit/finish events (budget 3*waves+3) — a "
+                "per-token sync leaked into the paged serve loop")
         return [t if t is not None else "" for t in results]
 
     # ------------------------------------------------------------------

@@ -313,6 +313,23 @@ class Replica:
         self.served_jobs = 0       # (job, sample) replicas served OK here
         self.decode_tokens = 0     # approx tokens decoded here
 
+    def ensure_name(self, default: str) -> str:
+        """Give an anonymous replica its gateway-assigned name."""
+        if self.name is None:
+            self.name = default
+        return self.name
+
+    def record_outcome(self, ok: bool) -> None:
+        """Health bookkeeping for one gateway drain against this
+        replica: the breaker transition and its FaultStats move
+        together, so half-open probe accounting can't skew."""
+        if ok:
+            self.breaker.on_success()
+            self.stats.successes += 1
+        else:
+            self.breaker.on_failure()
+            self.stats.failures += 1
+
     def drain_jobs(self, jobs: List[_QueuedJob], *, key,
                    clock) -> List[ScheduledResult]:
         """Submit ``jobs`` to this replica's scheduler and drain once.
@@ -401,8 +418,7 @@ class EnginePool:
         self.replicas = [r if isinstance(r, Replica) else Replica(r)
                          for r in replicas]
         for i, r in enumerate(self.replicas):
-            if r.name is None:
-                r.name = f"r{i}"
+            r.ensure_name(f"r{i}")
         self.route_by_cost = route_by_cost
         self.cost_weight = float(cost_weight) if route_by_cost else 0.0
         self.queue = GatewayQueue(max_bypass=max_bypass,
@@ -589,13 +605,11 @@ class EnginePool:
                 if bad:
                     # a replica drain with ANY failed row is a replica
                     # failure: trip its breaker, requeue its casualties
-                    rep.breaker.on_failure()
-                    rep.stats.failures += 1
+                    rep.record_outcome(ok=False)
                     self.usage.replica_failures += 1
                     failed += bad
                 else:
-                    rep.breaker.on_success()
-                    rep.stats.successes += 1
+                    rep.record_outcome(ok=True)
                 ok = [r for r in res if r.error is None]
                 self.usage.jobs_drained += len(ok)
                 self._fill_cache(batch, ok)

@@ -102,6 +102,26 @@ class PagePool:
         if self._ref[page] == 0:
             self._free.append(page)
 
+    def audit(self) -> None:
+        """Full-pool consistency check; raises AssertionError on the
+        first broken invariant.  O(num_pages) — run under
+        ``REPRO_SANITIZE=1`` (the engine calls it every admission wave),
+        not on the steady-state hot path."""
+        free = set(self._free)
+        assert len(free) == len(self._free), (
+            f"duplicate entries on the free list: {sorted(self._free)}")
+        assert NULL_PAGE not in free and self._ref[NULL_PAGE] >= 1, (
+            "null page 0 must stay permanently held and never freed")
+        neg = np.nonzero(self._ref < 0)[0]
+        assert neg.size == 0, f"negative refcounts on pages {neg.tolist()}"
+        for p in range(1, self.num_pages):
+            if self._ref[p] == 0:
+                assert p in free, f"page {p} has ref 0 but is not free"
+            else:
+                assert p not in free, (
+                    f"page {p} is on the free list with ref "
+                    f"{int(self._ref[p])}")
+
 
 class _Node:
     __slots__ = ("tokens", "page", "children", "parent", "last_use")

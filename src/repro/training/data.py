@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import random
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

@@ -1,0 +1,10 @@
+"""R1 clean fixture: injected clock, seeded RNG, sorted set iteration."""
+import random
+
+
+def route_job(jobs, *, clock, seed):
+    started = clock()                       # injected, not ambient
+    rng = random.Random(seed)               # seeded instance
+    pick = rng.choice(jobs)
+    order = [j for j in sorted(set(jobs))]  # order-free consumer
+    return pick, order, started

@@ -1,0 +1,12 @@
+"""R1 firing fixture: ambient clock, global RNG, set-order iteration."""
+import random
+import time
+
+
+def route_job(jobs):
+    started = time.time()            # wall clock on a routing path
+    pick = random.choice(jobs)       # ambient module-level RNG
+    order = []
+    for j in set(jobs):              # hash-order iteration
+        order.append(j)
+    return pick, order, started

@@ -1,0 +1,19 @@
+"""R2 firing fixture: host syncs inside jit-traced regions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decode_step(tok, cache):
+    logits = jnp.dot(tok, cache)
+    best = logits.argmax()
+    return int(best), np.asarray(logits)   # two syncs under jit
+
+
+def _inner(x):
+    return x.item()                        # traced via the lambda below
+
+
+def run(x):
+    return jax.jit(lambda v: _inner(v))(x)

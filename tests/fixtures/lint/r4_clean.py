@@ -1,0 +1,40 @@
+"""R4 clean fixture: structurally consistent pallas_calls, with and
+without scalar prefetch."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def good_call(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 8),
+        in_specs=[pl.BlockSpec((8, 16), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 16), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, 16), jnp.float32)],
+    )(x)
+
+
+def _pf_kernel(s_ref, x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def good_prefetch(x, idx):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda s, i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda s, i, j: (i, j)),
+    )
+    return pl.pallas_call(
+        _pf_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+    )(idx, x)

@@ -1,0 +1,30 @@
+"""R4 firing fixture: one structurally inconsistent pallas_call.
+
+Never imported — repro-lint validates it statically, which is the point:
+these mistakes normally only surface as lowering errors on a TPU.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def bad_call(x, y):
+    kernel = functools.partial(_kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),        # arity 1 != 2
+            pl.BlockSpec((8, 8), lambda i, j: (i, j, 0)),  # 3 coords, 2 dims
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((20, 32), jnp.float32),  # 20 % 8 != 0
+        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32), 7],    # 7: not a ctor
+    )(x, y)  # kernel takes 3 refs; specs demand 2 in + 1 out + 2 scratch = 5

@@ -1,0 +1,24 @@
+"""R5 clean fixture: replica state changes only through replica methods."""
+
+
+class Replica:
+    def __init__(self):
+        self.name = None
+        self.tok_per_s = 100.0
+
+    def ensure_name(self, default):
+        if self.name is None:
+            self.name = default
+
+    def observe(self, toks, dt):
+        self.tok_per_s = toks / dt
+
+
+class EnginePool:
+    def __init__(self, replicas):
+        self.replicas = list(replicas)
+        for i, rep in enumerate(self.replicas):
+            rep.ensure_name(f"r{i}")
+
+    def stream(self, rep, toks, dt):
+        rep.observe(toks, dt)

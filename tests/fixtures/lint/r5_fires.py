@@ -1,0 +1,18 @@
+"""R5 firing fixture: the gateway writes replica internals directly."""
+
+
+class Replica:
+    def __init__(self):
+        self.name = None
+        self.stats = object()
+        self.tok_per_s = 100.0
+
+
+class EnginePool:
+    def __init__(self, replicas):
+        self.replicas = replicas
+        for i, rep in enumerate(replicas):
+            rep.name = f"r{i}"           # fires: Replica.name
+
+    def stream(self, rep, toks, dt):
+        rep.tok_per_s = toks / dt        # fires: Replica.tok_per_s

@@ -1,0 +1,6 @@
+"""R3 clean fixture: lanes derive from stable rng_id via fold_in."""
+import jax
+
+
+def job_lane(base_key, rng_id):
+    return jax.random.fold_in(base_key, rng_id)

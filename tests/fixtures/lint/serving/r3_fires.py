@@ -1,0 +1,8 @@
+"""R3 firing fixture: ad-hoc key minting on a scheduler path."""
+import jax
+
+
+def drain(jobs, seed):
+    key = jax.random.PRNGKey(seed)       # mints a lane outside the sampler
+    key, sub = jax.random.split(key)     # splits it ad hoc
+    return key, sub

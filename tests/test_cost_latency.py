@@ -1,6 +1,4 @@
 """Cost model + latency model fidelity vs. the paper's own numbers."""
-import math
-
 import pytest
 
 from repro.core.cost import GPT4O_JAN2025, CostModel

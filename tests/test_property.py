@@ -5,7 +5,6 @@ fallback in tests/_hypothesis_compat.py draws deterministic pseudo-random
 examples from the same strategy expressions — the invariants are never
 silently skipped (they used to be, behind an importorskip)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,8 +1,6 @@
 """Calibrated simulator behaviour: degradation curves match paper Tables 4/5."""
 import json
 
-import numpy as np
-
 from repro.core.prompts import render_worker
 from repro.core.simulated import (CTX_CURVE, STEPS_CURVE, ScriptedRemote,
                                   SimulatedLocal, context_factor, find_facts,

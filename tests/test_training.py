@@ -1,6 +1,4 @@
 """Training substrate: loss decreases, checkpoint roundtrip, data packing."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
