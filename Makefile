@@ -35,11 +35,14 @@ fleet:
 	$(PYTEST) -q tests/test_fleet.py
 	$(PYTEST) -q tests/test_equivalence.py -k fleet
 
-# static analysis: repro-lint determinism & trace-safety rules R1-R5
-# (exit 1 on any unbaselined finding; see lint_baseline.json), plus ruff
+# static analysis: repro-lint rules R1-R9 over the library (exit 1 on
+# any unbaselined finding; see lint_baseline.json + repro-lint.toml),
+# an R1/R3-only determinism pass over the entry points (benchmarks/,
+# examples/ — key minting at the entry point is allowlisted), plus ruff
 # style lint when installed (CI installs it; local runs skip gracefully)
 lint:
 	python -m repro.analysis.lint src/repro
+	python -m repro.analysis.lint benchmarks examples --rules R1,R3
 	@if command -v ruff >/dev/null 2>&1; then ruff check src tests; \
 	else echo "ruff not installed; skipping style lint"; fi
 

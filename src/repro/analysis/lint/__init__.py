@@ -1,17 +1,22 @@
 """repro-lint: repo-specific determinism & trace-safety static analysis.
 
 Run as ``python -m repro.analysis.lint [paths] [--baseline FILE]`` or
-``make lint``.  See :mod:`.engine` for mechanics and :mod:`.rules` /
-:mod:`.pallas` for what each rule (R1–R5) protects.
+``make lint``.  See :mod:`.engine` for mechanics, :mod:`.dataflow` for
+the shared interprocedural substrate, and :mod:`.rules` /
+:mod:`.pallas` for what each rule (R1–R9) protects.
 """
+from .config import LintConfig, load_config
 from .engine import (BaselineEntry, Finding, LintReport, Module, Project,
-                     Rule, lint_paths, load_baseline)
-from .pallas import PallasKernelRule
-from .rules import (HostSyncRule, NondeterminismRule, RngLaneRule,
-                    SharedStateRule, core_rules)
+                     Rule, lint_paths, load_baseline, prune_baseline)
+from .pallas import PallasKernelRule, VmemBudgetRule
+from .rules import (HostSyncRule, NondeterminismRule, OwnershipRule,
+                    ProtocolContractRule, RngLaneRule,
+                    ShardingConsistencyRule, SharedStateRule, core_rules)
 
 __all__ = [
-    "BaselineEntry", "Finding", "LintReport", "Module", "Project", "Rule",
-    "lint_paths", "load_baseline", "core_rules", "NondeterminismRule",
-    "HostSyncRule", "RngLaneRule", "PallasKernelRule", "SharedStateRule",
+    "BaselineEntry", "Finding", "LintConfig", "LintReport", "Module",
+    "Project", "Rule", "lint_paths", "load_baseline", "load_config",
+    "prune_baseline", "core_rules", "NondeterminismRule", "HostSyncRule",
+    "RngLaneRule", "PallasKernelRule", "SharedStateRule", "VmemBudgetRule",
+    "ShardingConsistencyRule", "OwnershipRule", "ProtocolContractRule",
 ]

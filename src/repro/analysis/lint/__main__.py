@@ -1,23 +1,74 @@
 """CLI: ``python -m repro.analysis.lint [paths] [options]``.
 
 Exit status is 0 iff there are no unbaselined findings — wire it
-straight into CI.  ``--fix-hints`` appends each rule's remediation
-hint; ``--show-baselined`` lists accepted findings too.
+straight into CI.  ``--format json`` emits a stable machine-readable
+report (rule, file, line, message, fix hint); ``--format github`` emits
+workflow-command annotations so findings land on the PR diff.
+``--rules R1,R3`` restricts the active rule set (used for the
+entry-point pass over benchmarks/ and examples/); ``--prune-baseline``
+rewrites the baseline file dropping entries this run proves stale.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
-from .engine import lint_paths, load_baseline
+from .config import load_config
+from .engine import lint_paths, load_baseline, prune_baseline
 from .rules import core_rules
+
+
+def _finding_dict(f) -> dict:
+    return {"rule": f.rule, "file": f.file, "line": f.line, "col": f.col,
+            "scope": f.scope, "message": f.message, "fix_hint": f.hint}
+
+
+def _emit_json(report, args) -> None:
+    payload = {
+        "version": 1,
+        "files": report.files,
+        "findings": [_finding_dict(f) for f in report.findings],
+        "baselined": [_finding_dict(f) for f in report.baselined],
+        "inline_disabled": report.inline_disabled,
+        "stale_baseline": [{"rule": e.rule, "file": e.file,
+                            "scope": e.scope, "message": e.message}
+                           for e in report.stale_baseline],
+        "notes": report.notes,
+    }
+    print(json.dumps(payload, indent=2))
+
+
+def _emit_github(report, args) -> None:
+    for f in report.findings:
+        msg = f.message.replace("\n", " ")
+        print(f"::error file={f.file},line={f.line},col={f.col},"
+              f"title=repro-lint {f.rule}::{msg}")
+    for note in report.notes:
+        print(f"::notice title=repro-lint::{note}")
+    for e in report.stale_baseline:
+        print(f"::warning file={e.file},title=repro-lint stale baseline::"
+              f"{e.rule} [{e.scope}] {e.message}")
+
+
+def _emit_text(report, args) -> None:
+    for f in report.findings:
+        print(f.format(fix_hints=args.fix_hints))
+    if args.show_baselined:
+        for f in report.baselined:
+            print(f"[baselined] {f.format()}")
+    for note in report.notes:
+        print(f"note: {note}")
+    for e in report.stale_baseline:
+        print(f"warning: stale baseline entry matches nothing: "
+              f"{e.rule} {e.file} [{e.scope}] {e.message!r}", file=sys.stderr)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="repro-lint: determinism & trace-safety rules R1-R5")
+        description="repro-lint: determinism & trace-safety rules R1-R9")
     ap.add_argument("paths", nargs="*", default=["src/repro"],
                     help="files/directories to lint (default: src/repro)")
     ap.add_argument("--baseline", default="lint_baseline.json",
@@ -27,14 +78,33 @@ def main(argv=None) -> int:
                     help="report every finding, ignoring the baseline")
     ap.add_argument("--root", default=".",
                     help="path findings are reported relative to")
+    ap.add_argument("--config", default="repro-lint.toml",
+                    help="rule configuration (VMEM budget, worst-case "
+                         "dims); missing file = built-in defaults")
+    ap.add_argument("--rules", default=None, metavar="R1,R3",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--format", default="text",
+                    choices=("text", "json", "github"),
+                    help="report format (default: text)")
     ap.add_argument("--fix-hints", action="store_true",
                     help="print each rule's remediation hint")
     ap.add_argument("--show-baselined", action="store_true",
                     help="also list findings matched by the baseline")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline file dropping entries this "
+                         "run proves stale (justifications preserved)")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
-    rules = core_rules()
+    rules = core_rules(load_config(Path(args.config)))
+    if args.rules:
+        want = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = want - {r.id for r in rules}
+        if unknown:
+            print(f"repro-lint: error: unknown rule ids {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in want]
     if args.list_rules:
         for r in rules:
             print(f"{r.id}  {r.name}")
@@ -53,14 +123,14 @@ def main(argv=None) -> int:
         print(f"repro-lint: error: {e}", file=sys.stderr)
         return 2
 
-    for f in report.findings:
-        print(f.format(fix_hints=args.fix_hints))
-    if args.show_baselined:
-        for f in report.baselined:
-            print(f"[baselined] {f.format()}")
-    for e in report.stale_baseline:
-        print(f"warning: stale baseline entry matches nothing: "
-              f"{e.rule} {e.file} [{e.scope}] {e.message!r}", file=sys.stderr)
+    {"text": _emit_text, "json": _emit_json,
+     "github": _emit_github}[args.format](report, args)
+
+    if args.prune_baseline and report.stale_baseline and bl_path.exists():
+        dropped = prune_baseline(bl_path, report.stale_baseline)
+        print(f"repro-lint: pruned {dropped} stale baseline "
+              f"entr{'y' if dropped == 1 else 'ies'} from {bl_path}",
+              file=sys.stderr)
 
     print(f"repro-lint: {report.files} files, "
           f"{len(report.findings)} findings "

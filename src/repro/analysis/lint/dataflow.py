@@ -1,0 +1,381 @@
+"""Shared interprocedural substrate for repro-lint rules.
+
+PR 9's rules each grew private machinery for the same three questions —
+"which function does this expression call?" (R2), "which class owns this
+field?" (R5), "what runs inside a traced region?" (R2 again).  This
+module hoists that machinery into one project-level substrate every rule
+reuses, with results cached on the :class:`~.engine.Project` so N rules
+pay for one analysis:
+
+  resolve_target     function-valued expression -> its def, across
+                     modules (through import aliases, ``partial``,
+                     lambdas)
+  traced_functions   the transitive closure of functions reachable from
+                     a trace entry point — ``jax.jit`` / ``pjit`` /
+                     ``pmap`` / ``shard_map`` decorators and calls —
+                     following direct calls, ``lax`` control-flow
+                     operands, and containment (a def nested in a traced
+                     fn runs at trace time)
+  field_owners       field name -> owning classes, over a watched class
+                     set (dataclass annotations, class-body assigns,
+                     ``self.X = ...`` in methods)
+  mutable_fields     the subset of fields bound to mutable containers
+                     (list/dict/set/deque literals, comprehensions, or
+                     numpy buffers) — the state that can *escape* and be
+                     mutated through an alias
+  protocol_generators  every generator registered in ``PROTOCOLS`` via
+                     ``@register_protocol(name)``, plus its nested
+                     helper generators (``yield from degrade_local(...)``)
+
+All of it is plain AST dataflow: no imports of the linted code, no jax.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Module, Project
+
+# ---------------------------------------------------------------------------
+# AST navigation
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return cur
+        cur = getattr(cur, "_parent", None)
+    return None
+
+
+def enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur
+        cur = getattr(cur, "_parent", None)
+    return None
+
+
+def enclosing_class_name(node: ast.AST) -> Optional[str]:
+    cls = enclosing_class(node)
+    return cls.name if cls is not None else None
+
+
+def attr_chain(node: ast.AST) -> Tuple[Optional[str], List[str]]:
+    """``rep.stats.failures`` -> ("rep", ["stats", "failures"])."""
+    attrs: List[str] = []
+    while isinstance(node, ast.Attribute):
+        attrs.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id, list(reversed(attrs))
+    return None, list(reversed(attrs))
+
+
+def module_dotted(path: str) -> str:
+    parts = [p for p in path.split("/") if p]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    return ".".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# cross-module function resolution
+
+
+class FnKey:
+    """Identity of a function/lambda node within the project graph."""
+    __slots__ = ("module", "node")
+
+    def __init__(self, module: Module, node: ast.AST):
+        self.module, self.node = module, node
+
+    def __hash__(self):
+        return hash((self.module.path, id(self.node)))
+
+    def __eq__(self, other):
+        return (self.module.path, self.node) == (other.module.path, other.node)
+
+
+def functions(module: Module) -> Dict[str, ast.AST]:
+    """Defs (incl. methods) by simple name, first wins; cached."""
+    cached = getattr(module, "_fn_index", None)
+    if cached is not None:
+        return cached
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    module._fn_index = out  # type: ignore[attr-defined]
+    return out
+
+
+def dotted_index(project: Project) -> Dict[str, Module]:
+    cached = getattr(project, "_dotted_index", None)
+    if cached is not None:
+        return cached
+    out = {module_dotted(m.path): m for m in project.modules}
+    project._dotted_index = out  # type: ignore[attr-defined]
+    return out
+
+
+def resolve_target(module: Module, expr: ast.AST,
+                   project: Project) -> Optional[FnKey]:
+    """A function-valued expression -> its def, across modules."""
+    if isinstance(expr, ast.Lambda):
+        return FnKey(module, expr)
+    if isinstance(expr, ast.Call):  # partial(f, ...) / functools.partial
+        dotted = module.resolve(expr.func)
+        if dotted and dotted.split(".")[-1] == "partial" and expr.args:
+            return resolve_target(module, expr.args[0], project)
+        return None
+    dotted = module.resolve(expr)
+    if not dotted:
+        return None
+    # local def?
+    if "." not in dotted and dotted in functions(module):
+        return FnKey(module, functions(module)[dotted])
+    # cross-module: longest project-module prefix
+    index = dotted_index(project)
+    parts = dotted.split(".")
+    for cut in range(len(parts) - 1, 0, -1):
+        mod = index.get(".".join(parts[:cut]))
+        if mod is not None and cut < len(parts):
+            fn = functions(mod).get(parts[cut])
+            if fn is not None:
+                return FnKey(mod, fn)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# traced-region closure (R2 and friends)
+
+
+TRACE_WRAPPERS = {  # call targets whose function-valued args become traced
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.scan",
+    "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map",
+    "jax.vmap", "jax.checkpoint", "jax.remat", "jax.grad",
+    "jax.value_and_grad",
+}
+
+# trace entry points: their function argument (or decorated def) is the
+# root of a traced region.  shard_map/pjit/pmap seed exactly like jit —
+# their bodies are staged, so a host sync inside is just as fatal.
+_TRACE_ENTRY_LEAVES = {"jit", "pjit", "pmap", "shard_map"}
+
+
+def is_trace_entry(expr: ast.AST, module: Module) -> bool:
+    """``jax.jit`` / ``jax.pjit`` / ``jax.pmap`` / ``shard_map`` (however
+    imported), optionally through ``partial(...)``."""
+    dotted = module.resolve(expr)
+    if dotted:
+        parts = dotted.split(".")
+        if parts[-1] in _TRACE_ENTRY_LEAVES and (
+                parts[0] == "jax" or parts[-1] == "shard_map"):
+            return True
+        if dotted == "jax.jit.jit":
+            return True
+    if isinstance(expr, ast.Call):  # partial(jax.jit, ...)
+        d = module.resolve(expr.func)
+        if d and d.split(".")[-1] == "partial" and expr.args:
+            return is_trace_entry(expr.args[0], module)
+    return False
+
+
+def traced_functions(project: Project) -> Set[FnKey]:
+    """Every function reachable from a trace entry point.  Cached."""
+    cached = getattr(project, "_traced", None)
+    if cached is not None:
+        return cached
+
+    seeds: Set[FnKey] = set()
+    edges: Dict[FnKey, Set[FnKey]] = {}
+
+    for module in project.modules:
+        for node in ast.walk(module.tree):
+            # seed: @jax.jit / @partial(jax.jit, ...) / @shard_map(...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if is_trace_entry(dec, module) or (
+                            isinstance(dec, ast.Call)
+                            and is_trace_entry(dec.func, module)):
+                        seeds.add(FnKey(module, node))
+            # seed: jax.jit(f) / shard_map(f, mesh=...) / pjit(partial(f))
+            if isinstance(node, ast.Call) \
+                    and is_trace_entry(node.func, module) and node.args:
+                tgt = resolve_target(module, node.args[0], project)
+                if tgt:
+                    seeds.add(tgt)
+            # edges out of the innermost enclosing function
+            if isinstance(node, ast.Call):
+                owner = enclosing_function(node)
+                if owner is None:
+                    continue
+                src = FnKey(module, owner)
+                tgts: List[Optional[FnKey]] = [
+                    resolve_target(module, node.func, project)]
+                dotted = module.resolve(node.func)
+                if dotted in TRACE_WRAPPERS or (
+                        dotted and dotted.startswith("jax.lax.")):
+                    for arg in node.args:
+                        tgts.append(resolve_target(module, arg, project))
+                for t in tgts:
+                    if t is not None:
+                        edges.setdefault(src, set()).add(t)
+            # containment: a def nested in a traced fn runs at trace time
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                owner = enclosing_function(node)
+                if owner is not None:
+                    edges.setdefault(FnKey(module, owner), set()).add(
+                        FnKey(module, node))
+
+    traced = set(seeds)
+    frontier = list(seeds)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in edges.get(cur, ()):
+            if nxt not in traced:
+                traced.add(nxt)
+                frontier.append(nxt)
+    project._traced = traced  # type: ignore[attr-defined]
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# class field ownership
+
+
+_MUTABLE_CTOR_LEAVES = {
+    "list", "dict", "set", "deque", "defaultdict", "OrderedDict", "Counter",
+    # numpy-backed buffers are shared mutable state too (PagePool._ref)
+    "zeros", "empty", "ones", "full", "array", "arange",
+}
+
+
+def _is_mutable_value(module: Module, expr: ast.AST) -> bool:
+    if isinstance(expr, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(expr, ast.Call):
+        dotted = module.resolve(expr.func)
+        if dotted and dotted.split(".")[-1] in _MUTABLE_CTOR_LEAVES:
+            return True
+    return False
+
+
+def _is_mutable_annotation(ann: ast.AST) -> bool:
+    root = ann
+    if isinstance(root, ast.Subscript):
+        root = root.value
+    name = root.attr if isinstance(root, ast.Attribute) else (
+        root.id if isinstance(root, ast.Name) else "")
+    return name in ("List", "Dict", "Set", "list", "dict", "set",
+                    "DefaultDict", "Deque", "MutableMapping")
+
+
+def field_owners(project: Project,
+                 classes: Tuple[str, ...]) -> Dict[str, Set[str]]:
+    """field name -> watched classes declaring it (annotations, class-body
+    assigns, ``self.X = ...`` in methods).  Cached per class set."""
+    cache = getattr(project, "_field_owner_cache", None)
+    if cache is None:
+        cache = project._field_owner_cache = {}  # type: ignore[attr-defined]
+    if classes in cache:
+        return cache[classes]
+
+    owners: Dict[str, Set[str]] = {}
+    mutable: Dict[str, Set[str]] = {}
+
+    def record(field: str, cls: str, is_mutable: bool) -> None:
+        owners.setdefault(field, set()).add(cls)
+        if is_mutable:
+            mutable.setdefault(field, set()).add(cls)
+
+    for module in project.modules:
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.ClassDef)
+                    and node.name in classes):
+                continue
+            for stmt in node.body:  # dataclass-style annotated fields
+                if isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name):
+                    mut = _is_mutable_annotation(stmt.annotation) or (
+                        stmt.value is not None
+                        and _is_mutable_value(module, stmt.value))
+                    record(stmt.target.id, node.name, mut)
+                elif isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            record(t.id, node.name,
+                                   _is_mutable_value(module, stmt.value))
+            for sub in ast.walk(node):  # self.X = ... in methods
+                if isinstance(sub, (ast.Assign, ast.AugAssign,
+                                    ast.AnnAssign)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    value = getattr(sub, "value", None)
+                    for t in targets:
+                        if isinstance(t, ast.Attribute) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id == "self":
+                            record(t.attr, node.name,
+                                   value is not None
+                                   and _is_mutable_value(module, value))
+    cache[classes] = owners
+    mcache = getattr(project, "_mutable_field_cache", None)
+    if mcache is None:
+        mcache = project._mutable_field_cache = {}  # type: ignore
+    mcache[classes] = mutable
+    return owners
+
+
+def mutable_fields(project: Project,
+                   classes: Tuple[str, ...]) -> Dict[str, Set[str]]:
+    """The mutable-container subset of :func:`field_owners`."""
+    field_owners(project, classes)  # populates both caches
+    return project._mutable_field_cache[classes]  # type: ignore
+
+
+# ---------------------------------------------------------------------------
+# protocol discovery (R9)
+
+
+def protocol_generators(module: Module) -> List[Tuple[str, ast.FunctionDef]]:
+    """(protocol name, generator def) for every ``@register_protocol``
+    def in ``module`` — the whole-module view; nested helper generators
+    are the caller's business (see :func:`nested_generators`)."""
+    out: List[Tuple[str, ast.FunctionDef]] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            dotted = module.resolve(target)
+            if dotted and dotted.split(".")[-1] == "register_protocol":
+                name = ""
+                if isinstance(dec, ast.Call) and dec.args and isinstance(
+                        dec.args[0], ast.Constant):
+                    name = str(dec.args[0].value)
+                out.append((name, node))
+                break
+    return out
+
+
+def nested_generators(fn: ast.AST) -> List[ast.FunctionDef]:
+    """Defs nested in ``fn`` that contain a ``yield`` — the helper
+    generators a protocol consumes via ``yield from helper(...)``."""
+    out = []
+    for node in ast.walk(fn):
+        if node is fn or not isinstance(node, ast.FunctionDef):
+            continue
+        if any(isinstance(sub, (ast.Yield, ast.YieldFrom))
+               and enclosing_function(sub) is node
+               for sub in ast.walk(node)):
+            out.append(node)
+    return out

@@ -163,6 +163,9 @@ class Project:
     def __init__(self, modules: Sequence[Module]):
         self.modules = list(modules)
         self.by_path = {m.path: m for m in self.modules}
+        #: informational report lines rules may append (e.g. R6's computed
+        #: per-kernel VMEM footprints); surfaced via LintReport.notes
+        self.notes: List[str] = []
 
 
 @dataclasses.dataclass
@@ -191,6 +194,23 @@ def load_baseline(path: Path) -> List[BaselineEntry]:
     return out
 
 
+def prune_baseline(path: Path, stale: Sequence[BaselineEntry]) -> int:
+    """Rewrite the baseline file dropping ``stale`` entries; every kept
+    entry (and the top-level ``_comment``) survives byte-for-byte in
+    content — justifications included.  Idempotent: pruning an already
+    pruned file removes nothing.  Returns the number dropped."""
+    data = json.loads(path.read_text())
+    drop = {e.key for e in stale}
+    kept = [e for e in data.get("findings", [])
+            if (e["rule"], e["file"], e.get("scope", ""), e["message"])
+            not in drop]
+    removed = len(data.get("findings", [])) - len(kept)
+    if removed:
+        data["findings"] = kept
+        path.write_text(json.dumps(data, indent=2) + "\n")
+    return removed
+
+
 @dataclasses.dataclass
 class LintReport:
     findings: List[Finding]            # unbaselined — these fail the run
@@ -198,6 +218,7 @@ class LintReport:
     inline_disabled: int               # suppressed by disable comments
     stale_baseline: List[BaselineEntry]  # entries matching nothing
     files: int = 0
+    notes: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -261,6 +282,13 @@ def lint_paths(paths: Sequence[Path], *, rules: Sequence[Rule],
             baselined.append(f)
         else:
             findings.append(f)
-    stale = [e for e in baseline if e.key not in matched]
+    # an entry is stale only when THIS run could have matched it: its
+    # file was linted and its rule was active (split invocations — e.g.
+    # the R1/R3-only pass over benchmarks/ — must not cross-report)
+    linted = {m.path for m in modules}
+    active = {r.id for r in rules}
+    stale = [e for e in baseline
+             if e.key not in matched and e.file in linted
+             and e.rule in active]
     return LintReport(findings, baselined, inline_disabled, stale,
-                      files=len(files))
+                      files=len(files), notes=list(project.notes))

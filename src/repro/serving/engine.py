@@ -836,6 +836,8 @@ class InferenceEngine:
                                          self._pool_bytes)
         if _sanitize():
             self._pool.audit()
+            if self._radix is not None:
+                self._radix.audit(self._pool)
         return jnp.stack(rows), layers
 
     def _release_pages(self, pages):
@@ -1328,6 +1330,8 @@ class InferenceEngine:
         self.usage.add(total_prefill, total_decode)
         if sanitize:
             self._pool.audit()   # all rows released: catch page leaks
+            if self._radix is not None:
+                self._radix.audit(self._pool)   # trie/pool reconcile
             used = self.usage.host_transfers - xfer0
             waves = (self.usage.admitted_jobs + self.usage.finished_jobs
                      - waves0)

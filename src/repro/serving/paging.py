@@ -248,6 +248,48 @@ class RadixIndex:
             freed += 1
         return freed
 
+    def audit(self, pool: PagePool) -> None:
+        """Trie/pool cross-consistency check; raises AssertionError on
+        the first broken invariant.  O(n_nodes) — run under
+        ``REPRO_SANITIZE=1`` alongside :meth:`PagePool.audit`, not on
+        the steady-state hot path.  Checks: the node count matches
+        ``n_nodes``; every child key is its node's token chunk and every
+        chunk is page-sized; parent backlinks mirror the child edges;
+        every indexed page id is a real, non-null pool page the index
+        still holds a reference on; no page is indexed twice."""
+        seen_pages: Dict[int, Tuple[int, ...]] = {}
+        count = 0
+        stack = [(self.root, None)]
+        while stack:
+            node, parent = stack.pop()
+            if parent is None:            # root: synthetic, holds no page
+                assert node.tokens == () and node.page == NULL_PAGE, (
+                    "root node must be the empty-prefix null-page sentinel")
+            else:
+                count += 1
+                assert node.parent is parent, (
+                    f"parent backlink broken at node {node.tokens!r}")
+                assert len(node.tokens) == self.page_size, (
+                    f"node holds a {len(node.tokens)}-token chunk; the "
+                    f"trie indexes full {self.page_size}-token pages only")
+                assert 0 < node.page < pool.num_pages, (
+                    f"node {node.tokens!r} indexes out-of-range or null "
+                    f"page {node.page}")
+                assert pool.refcount(node.page) >= 1, (
+                    f"dangling page {node.page}: indexed by the trie but "
+                    "no longer held in the pool")
+                assert node.page not in seen_pages, (
+                    f"page {node.page} indexed by two trie nodes: "
+                    f"{seen_pages[node.page]!r} and {node.tokens!r}")
+                seen_pages[node.page] = node.tokens
+            for key, child in node.children.items():
+                assert key == child.tokens, (
+                    f"child keyed {key!r} but holds tokens "
+                    f"{child.tokens!r}")
+                stack.append((child, node))
+        assert count == self.n_nodes, (
+            f"n_nodes says {self.n_nodes} but the trie holds {count}")
+
 
 def cow_copy(pool: jnp.ndarray, src, dst, fill) -> jnp.ndarray:
     """Copy-on-write: for each i, copy the first ``fill[i]`` slots of page

@@ -1,0 +1,23 @@
+"""R6 clean fixture: a small, budget-respecting pallas_call with
+scratch — the footprint note should report blocks AND scratch."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 128
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def modest_call(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BLOCK, BLOCK), jnp.float32)],
+    )(x)

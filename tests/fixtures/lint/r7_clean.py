@@ -1,0 +1,29 @@
+"""R7 clean fixture: specs agree with the declared mesh axes, ranks are
+consistent per field branch (rank differences guarded by a shape test
+are fine — MoE 3-D leaves vs dense 2-D), and row lanes derive from
+data_axes(mesh)."""
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_mesh(devices):
+    return Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+
+
+def data_axes(mesh):
+    return ("data",)
+
+
+def param_specs(name, shape):
+    if name == "embed":
+        return P(None, "model")
+    if name in ("gate", "up"):
+        if len(shape) == 3:
+            return P(None, None, "model")   # expert-stacked MoE leaf
+        return P(None, "model")             # dense 2-D leaf
+    return P()
+
+
+def row_specs(mesh):
+    lanes = data_axes(mesh)
+    return {"rng_key": P(lanes, None), "row_len": P(lanes)}

@@ -1,0 +1,30 @@
+"""R7 firing fixture: PartitionSpecs that drift from the declared mesh.
+
+Fires four ways: an axis name the mesh never declared, one axis used
+twice in a single spec, disagreeing spec ranks inside one ``name ==``
+branch, and a row_specs that hand-rolls its lane axis over 'model'
+instead of deriving it from data_axes(mesh).
+"""
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_bad_mesh(devices):
+    return Mesh(np.array(devices).reshape(2, 4), ("data", "model"))
+
+
+def param_specs(name, shape):
+    if name == "embed":
+        return P("data", "modle")          # fires: unknown axis (typo)
+    if name == "wo":
+        return P("model", "model")         # fires: axis twice in one spec
+    if name == "wq":
+        if True:
+            return P(None, "model")        # rank 2 ...
+        return P(None, None, "model")      # ... vs rank 3: fires
+    return P()
+
+
+def row_specs(mesh):
+    # fires twice: never calls data_axes, and lanes shard over 'model'
+    return {"rng_key": P("model", None), "row_len": P("model")}

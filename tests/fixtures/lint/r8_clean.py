@@ -1,0 +1,38 @@
+"""R8 clean fixture: the same shapes done safely — owner methods
+mediate every mutation, reads hand out copies, snapshots are frozen."""
+import dataclasses
+
+
+class Replica:
+    def __init__(self):
+        self.inflight = []
+        self.tok_per_s = 100.0
+
+    def enqueue(self, job):
+        self.inflight.append(job)
+
+    def take(self):
+        return self.inflight.pop()
+
+
+class EnginePool:
+    def __init__(self, replicas):
+        self.replicas = list(replicas)
+        self.queue = []
+
+    def drain(self):
+        return list(self.queue)             # copy, not the live list
+
+    def route(self, rep, job):
+        rep.enqueue(job)                    # owner method mediates
+
+    def steal(self, rep):
+        return rep.take()
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    tok_per_s: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "tok_per_s", float(self.tok_per_s))

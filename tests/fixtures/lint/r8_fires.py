@@ -1,0 +1,37 @@
+"""R8 firing fixture: shared replica/pool state escaping its owner.
+
+Fires four ways: a foreign mutating call on a shared field, a mutable
+field escaping by reference via return, an alias taken outside the
+owner then mutated, and a snapshot class that is not frozen (plus an
+object.__setattr__ outside __init__).
+"""
+
+
+class Replica:
+    def __init__(self):
+        self.inflight = []
+        self.tok_per_s = 100.0
+
+
+class EnginePool:
+    def __init__(self, replicas):
+        self.replicas = list(replicas)
+        self.queue = []
+
+    def drain(self):
+        return self.queue                   # fires: escape via return
+
+    def route(self, rep, job):
+        rep.inflight.append(job)            # fires: foreign .append()
+
+    def steal(self, rep):
+        jobs = rep.inflight                 # alias a foreign shared field
+        jobs.pop()                          # fires: mutate the alias
+
+
+class ReplicaSnapshot:                      # fires: not @dataclass(frozen=True)
+    def __init__(self, rep):
+        self.tok_per_s = rep.tok_per_s
+
+    def touch(self, v):
+        object.__setattr__(self, "tok_per_s", v)   # fires: outside __init__

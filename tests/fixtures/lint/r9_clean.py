@@ -1,0 +1,23 @@
+"""R9 clean fixture: a conforming protocol — vocabulary actions only,
+every fallback resume checked against the falsy RemoteFailure sentinel,
+token usage left to the runner's UsageMeter.  Includes a nested helper
+generator (consumed via yield from) that must also conform."""
+from repro.core.runtime import (Final, LocalBatch, RemoteCall,
+                                RemoteFailure, register_protocol)
+
+
+@register_protocol("good_proto")
+def good_proto(task, cfg):
+    def degrade_local(prompt):
+        answers = yield LocalBatch([prompt])
+        return answers[0]
+
+    text = yield RemoteCall(task.query, fallback="degrade")
+    if isinstance(text, RemoteFailure):
+        text = yield from degrade_local(task.query)
+
+    syn = yield RemoteCall(task.context, fallback="degrade")
+    if not syn:
+        syn = text
+
+    yield Final(answer=syn, cost=0.0)

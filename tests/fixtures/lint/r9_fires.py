@@ -1,0 +1,21 @@
+"""R9 firing fixture: a protocol that breaks the action contract.
+
+Fires four ways: yields a raw dict the runner cannot service, drops a
+fallback RemoteCall's resume on the floor, never checks another
+fallback resume against RemoteFailure, and hand-rolls token accounting
+with approx_tokens() instead of reading the runner's UsageMeter.
+"""
+from repro.core.runtime import (Final, LocalBatch, RemoteCall,
+                                register_protocol)
+from repro.core.clients import approx_tokens
+
+
+@register_protocol("bad_proto")
+def bad_proto(task, cfg):
+    yield {"kind": "remote", "prompt": task.query}     # fires: non-action
+    yield RemoteCall(task.query, fallback="degrade")   # fires: discarded
+
+    text = yield RemoteCall(task.context, fallback="degrade")
+    spent = approx_tokens(text)                        # fires: accounting
+    yield LocalBatch([text])                           # 'text' never checked
+    yield Final(answer=text, cost=spent)

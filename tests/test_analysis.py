@@ -10,10 +10,12 @@ import pytest
 
 from repro.analysis import flops as F
 from repro.analysis import roofline as R
-from repro.analysis.lint import (BaselineEntry, HostSyncRule,
-                                 NondeterminismRule, PallasKernelRule,
-                                 RngLaneRule, SharedStateRule, core_rules,
-                                 lint_paths, load_baseline)
+from repro.analysis.lint import (BaselineEntry, HostSyncRule, LintConfig,
+                                 NondeterminismRule, OwnershipRule,
+                                 PallasKernelRule, ProtocolContractRule,
+                                 RngLaneRule, ShardingConsistencyRule,
+                                 SharedStateRule, VmemBudgetRule, core_rules,
+                                 lint_paths, load_baseline, prune_baseline)
 from repro.analysis.lint.__main__ import main as lint_main
 from repro.configs import get_smoke_config
 from repro.models.config import InputShape
@@ -198,6 +200,12 @@ RULE_FIXTURES = [
      FIXTURES / "serving" / "r3_clean.py"),
     (PallasKernelRule, FIXTURES / "r4_fires.py", FIXTURES / "r4_clean.py"),
     (SharedStateRule, FIXTURES / "r5_fires.py", FIXTURES / "r5_clean.py"),
+    (VmemBudgetRule, FIXTURES / "r6_fires.py", FIXTURES / "r6_clean.py"),
+    (ShardingConsistencyRule, FIXTURES / "r7_fires.py",
+     FIXTURES / "r7_clean.py"),
+    (OwnershipRule, FIXTURES / "r8_fires.py", FIXTURES / "r8_clean.py"),
+    (ProtocolContractRule, FIXTURES / "r9_fires.py",
+     FIXTURES / "r9_clean.py"),
 ]
 
 
@@ -249,6 +257,87 @@ def test_r5_names_class_and_field():
                                         "EnginePool.stream"}
 
 
+def test_r6_computes_real_kernel_footprints():
+    """R6's abstract evaluator resolves every shipped kernel's blocks
+    AND scratch without a TPU, and publishes the footprints as notes."""
+    report = lint_paths([REPO_ROOT / "src" / "repro" / "kernels"],
+                        rules=[VmemBudgetRule()], root=REPO_ROOT)
+    assert report.findings == []
+    notes = [n for n in report.notes if "VMEM footprint" in n]
+    assert len(notes) == 4           # chunked/paged prefill + 2 gqa decode
+    assert all("scratch" in n for n in notes)
+    assert not any("0 KiB scratch" in n for n in notes)
+
+
+def test_r6_shrunk_budget_fails_real_kernels():
+    """Break-an-invariant: a budget below chunked-prefill's ~706 KiB
+    footprint must turn the kernels into findings."""
+    tiny = LintConfig(vmem_budget_bytes=600 * 1024)
+    report = lint_paths([REPO_ROOT / "src" / "repro" / "kernels"],
+                        rules=[VmemBudgetRule(tiny)], root=REPO_ROOT)
+    assert any(f.rule == "R6" and "exceeds" in f.message
+               for f in report.findings)
+    # and a roomy budget accepts the same kernels
+    roomy = LintConfig(vmem_budget_bytes=16 * 1024 * 1024)
+    assert lint_paths([REPO_ROOT / "src" / "repro" / "kernels"],
+                      rules=[VmemBudgetRule(roomy)],
+                      root=REPO_ROOT).findings == []
+
+
+def test_r7_reports_each_drift():
+    msgs = [f.message for f in
+            _run(ShardingConsistencyRule(), FIXTURES / "r7_fires.py")
+            .findings]
+    assert any("unknown mesh axis 'modle'" in m for m in msgs)
+    assert any("appears twice" in m for m in msgs)
+    assert any("ranks disagree" in m for m in msgs)
+    assert any("data_axes" in m for m in msgs)
+    assert any("sharded over 'model'" in m for m in msgs)
+
+
+def test_r8_reports_each_escape():
+    msgs = [f.message for f in
+            _run(OwnershipRule(), FIXTURES / "r8_fires.py").findings]
+    assert any(".append() mutates" in m and "'inflight'" in m for m in msgs)
+    assert any("escapes EnginePool by reference" in m for m in msgs)
+    assert any("through local alias 'jobs'" in m for m in msgs)
+    assert any("not @dataclass(frozen=True)" in m for m in msgs)
+    assert any("object.__setattr__ outside" in m for m in msgs)
+
+
+def test_r8_cross_class_replica_write_fails(tmp_path):
+    """Break-an-invariant: unlock a Replica write from gateway code and
+    R8 must fail the run."""
+    broken = tmp_path / "gateway.py"
+    broken.write_text(
+        "class Replica:\n"
+        "    def __init__(self):\n"
+        "        self.inflight = []\n\n\n"
+        "class GatewayQueue:\n"
+        "    def push(self, rep, job):\n"
+        "        rep.inflight.append(job)\n")
+    report = lint_paths([broken], rules=[OwnershipRule()], root=tmp_path)
+    assert any(f.rule == "R8" and "'inflight'" in f.message
+               for f in report.findings)
+
+
+def test_r9_reports_each_contract_break():
+    msgs = [f.message for f in
+            _run(ProtocolContractRule(), FIXTURES / "r9_fires.py").findings]
+    assert any("yield of a non-action value" in m for m in msgs)
+    assert any("resume is discarded" in m for m in msgs)
+    assert any("never checked against RemoteFailure" in m for m in msgs)
+    assert any("approx_tokens" in m for m in msgs)
+
+
+def test_r9_real_protocols_conform():
+    """Every registered protocol in core/ satisfies the action contract."""
+    report = lint_paths([REPO_ROOT / "src" / "repro" / "core"],
+                        rules=[ProtocolContractRule()], root=REPO_ROOT)
+    assert report.findings == [], "\n".join(
+        f.format() for f in report.findings)
+
+
 # ---------------------------------------------------------------------------
 # repro-lint: engine mechanics
 # ---------------------------------------------------------------------------
@@ -275,8 +364,9 @@ def test_baseline_suppresses_and_reports_stale(tmp_path):
     baseline = [
         BaselineEntry(first.rule, first.file, first.scope, first.message,
                       "fixture: accepted on purpose"),
-        BaselineEntry("R1", "nowhere.py", "", "wall-clock call time.time()",
-                      "stale: matches nothing"),
+        BaselineEntry("R1", first.file, "gone_scope",
+                      "wall-clock call time.time()",
+                      "stale: the scope it matched was fixed"),
     ]
     report = lint_paths([FIXTURES / "r1_fires.py"], rules=[rule],
                         root=FIXTURES, baseline=baseline)
@@ -303,6 +393,109 @@ def test_cli_exit_codes(capsys):
                     "--root", str(FIXTURES)])
     assert rc == 0
     assert lint_main(["--list-rules"]) == 0
+
+
+def test_cli_list_rules_covers_r1_to_r9(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8", "R9"):
+        assert rid in out
+
+
+def test_cli_rules_filter(capsys):
+    # R4 finds nothing in the R1 fixture -> clean exit
+    rc = lint_main([str(FIXTURES / "r1_fires.py"), "--no-baseline",
+                    "--root", str(FIXTURES), "--rules", "R4"])
+    assert rc == 0
+    # unknown rule ids are a usage error, not silently ignored
+    rc = lint_main([str(FIXTURES / "r1_fires.py"), "--no-baseline",
+                    "--rules", "R42"])
+    capsys.readouterr()
+    assert rc == 2
+
+
+def test_cli_json_format(capsys):
+    rc = lint_main([str(FIXTURES / "r1_fires.py"), "--no-baseline",
+                    "--root", str(FIXTURES), "--format", "json"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    payload = json.loads(out)
+    assert payload["version"] == 1
+    assert payload["files"] == 1
+    assert payload["findings"]
+    for f in payload["findings"]:
+        assert set(f) == {"rule", "file", "line", "col", "scope",
+                          "message", "fix_hint"}
+        assert f["rule"] == "R1" and f["line"] > 0 and f["fix_hint"]
+    assert {"baselined", "inline_disabled", "stale_baseline",
+            "notes"} <= set(payload)
+
+
+def test_cli_github_format(capsys):
+    rc = lint_main([str(FIXTURES / "r1_fires.py"), "--no-baseline",
+                    "--root", str(FIXTURES), "--format", "github"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "::error file=r1_fires.py,line=" in out
+    assert "title=repro-lint R1" in out
+    # notes ride along as ::notice annotations
+    rc = lint_main([str(REPO_ROOT / "src" / "repro" / "kernels"),
+                    "--no-baseline", "--root", str(REPO_ROOT),
+                    "--rules", "R6", "--format", "github"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "::notice title=repro-lint::" in out
+    assert "VMEM footprint" in out
+
+
+def test_prune_baseline_idempotent(tmp_path):
+    """--prune-baseline drops exactly the stale entries, preserves the
+    _comment and every kept justification, and is idempotent."""
+    rule = NondeterminismRule()
+    live = _run(rule, FIXTURES / "r1_fires.py").findings[0]
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({
+        "_comment": ["hands off"],
+        "findings": [
+            {"rule": live.rule, "file": live.file, "scope": live.scope,
+             "message": live.message, "justification": "still real"},
+            {"rule": "R1", "file": live.file, "scope": "gone_scope",
+             "message": "wall-clock call time.time()",
+             "justification": "was fixed long ago"},
+        ]}, indent=2) + "\n")
+    baseline = load_baseline(bl)
+    report = lint_paths([FIXTURES / "r1_fires.py"], rules=[rule],
+                        root=FIXTURES, baseline=baseline)
+    assert [e.scope for e in report.stale_baseline] == ["gone_scope"]
+    assert prune_baseline(bl, report.stale_baseline) == 1
+    data = json.loads(bl.read_text())
+    assert data["_comment"] == ["hands off"]
+    assert len(data["findings"]) == 1
+    assert data["findings"][0]["justification"] == "still real"
+    # idempotent: a second prune with a re-run report removes nothing
+    report2 = lint_paths([FIXTURES / "r1_fires.py"], rules=[rule],
+                         root=FIXTURES, baseline=load_baseline(bl))
+    assert report2.stale_baseline == []
+    assert prune_baseline(bl, report2.stale_baseline) == 0
+    assert json.loads(bl.read_text())["findings"][0]["justification"] \
+        == "still real"
+
+
+def test_stale_scoped_to_linted_files_and_active_rules():
+    """Split invocations (the R1/R3 pass over benchmarks/) must not
+    report entries for files or rules outside the run as stale."""
+    entry = BaselineEntry("R1", "elsewhere/mod.py", "main",
+                          "wall-clock call time.time()", "other pass")
+    report = lint_paths([FIXTURES / "r1_fires.py"],
+                        rules=[NondeterminismRule()], root=FIXTURES,
+                        baseline=[entry])
+    assert report.stale_baseline == []      # file not linted here
+    entry2 = BaselineEntry("R4", "r1_fires.py", "main", "anything",
+                           "inactive rule")
+    report = lint_paths([FIXTURES / "r1_fires.py"],
+                        rules=[NondeterminismRule()], root=FIXTURES,
+                        baseline=[entry2])
+    assert report.stale_baseline == []      # rule not active here
 
 
 # ---------------------------------------------------------------------------

@@ -179,6 +179,66 @@ def test_radix_insert_evict_round_trip(prompts):
     assert pool.available == 127
 
 
+def test_radix_audit_reconciles_with_pool():
+    """The REPRO_SANITIZE audit passes across insert/evict churn: node
+    counts, child keys, parent backlinks, and per-page pool refs all
+    reconcile at every step."""
+    ps = 4
+    pool = PagePool(num_pages=64, page_size=ps)
+    radix = RadixIndex(page_size=ps)
+    prompts = [tuple(range(i, i + 12)) for i in range(0, 24, 4)]
+    for toks in prompts:
+        pages = pool.alloc(len(toks) // ps)
+        radix.insert(toks, pages, pool)
+        for p in pages:
+            pool.release(p)
+        radix.audit(pool)
+        pool.audit()
+    radix.evict(pool, pool.available + 2)
+    radix.audit(pool)
+    pool.audit()
+
+
+def test_radix_audit_catches_corruption():
+    """Break each audited invariant by hand; the audit must name it."""
+    ps = 4
+    pool = PagePool(num_pages=16, page_size=ps)
+    radix = RadixIndex(page_size=ps)
+    toks = (1, 2, 3, 4, 5, 6, 7, 8)
+    pages = pool.alloc(2)
+    radix.insert(toks, pages, pool)
+    for p in pages:
+        pool.release(p)
+    radix.audit(pool)                      # sanity: starts consistent
+
+    # (a) dangling page: the pool no longer holds what the trie indexes
+    node = radix.root.children[(1, 2, 3, 4)]
+    pool.release(node.page)
+    with pytest.raises(AssertionError, match="dangling page"):
+        radix.audit(pool)
+    assert pool.alloc(1) == [node.page]    # free stack hands it back
+    radix.audit(pool)
+
+    # (b) node-count drift
+    radix.n_nodes += 1
+    with pytest.raises(AssertionError, match="n_nodes"):
+        radix.audit(pool)
+    radix.n_nodes -= 1
+
+    # (c) a child keyed under the wrong chunk
+    child = node.children.pop((5, 6, 7, 8))
+    node.children[(9, 9, 9, 9)] = child
+    with pytest.raises(AssertionError, match="child keyed"):
+        radix.audit(pool)
+    node.children.pop((9, 9, 9, 9))
+    node.children[(5, 6, 7, 8)] = child
+
+    # (d) two nodes indexing one page
+    child.page = node.page
+    with pytest.raises(AssertionError, match="indexed by two"):
+        radix.audit(pool)
+
+
 def test_radix_partial_page_fill_from_match():
     """A probe diverging mid-page reports the partial divergence page
     with its token fill (the COW source)."""
